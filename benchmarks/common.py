@@ -1,0 +1,67 @@
+"""Shared benchmark plumbing: policy sets, timed runs, CSV/JSON output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (OASSTConfig, SynthConfig, default_factories,
+                        oasst_style_trace, run_policy, synthetic_trace)
+
+OUT_DIR = os.environ.get("BENCH_OUT", "bench_results")
+N_SEEDS = int(os.environ.get("BENCH_SEEDS", "3"))
+TRACE_LEN = int(os.environ.get("BENCH_TRACE_LEN", "10000"))
+
+PAPER_BASELINES = ["FIFO", "LRU", "CLOCK", "TTL", "TinyLFU", "ARC",
+                   "S3-FIFO", "SIEVE", "2Q", "LHD", "LeCaR"]
+
+
+def factories(include_belady=True):
+    return default_factories(include_belady=include_belady)
+
+
+def run_setting(trace, capacity, facs, hit_mode="content"):
+    out = {}
+    for name, f in facs.items():
+        s = run_policy(trace, capacity, f, name=name, hit_mode=hit_mode)
+        out[name] = s
+    return out
+
+
+def agg(rows: list[dict]) -> dict:
+    """mean over seeds: {policy: mean hit_ratio}."""
+    keys = rows[0].keys()
+    return {k: float(np.mean([r[k].hit_ratio for r in rows])) for k in keys}
+
+
+def gains(means: dict) -> dict:
+    base = {k: v for k, v in means.items()
+            if k in PAPER_BASELINES}
+    best = max(base.values())
+    avg = float(np.mean(list(base.values())))
+    rac = means.get("RAC", float("nan"))
+    return {"best_baseline": best, "avg_baseline": avg,
+            "rac": rac,
+            "gain_vs_best": rac / best - 1 if best else float("nan"),
+            "gain_vs_avg": rac / avg - 1 if avg else float("nan")}
+
+
+def emit(name: str, wall_us: float, derived: str):
+    print(f"{name},{wall_us:.1f},{derived}", flush=True)
+
+
+def save_json(fname: str, obj):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, fname), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

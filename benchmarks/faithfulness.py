@@ -1,0 +1,49 @@
+"""Reproduction-decision ablation: quantifies the three faithfulness
+resolutions documented in DESIGN.md §6 / EXPERIMENTS §Paper-claims:
+
+  1. lifetime vs residency-scoped freq/dep metadata (Def. 2 "so far"),
+  2. persistent vs deleted empty-topic TP state (Alg. 2 Data vs Alg. 5),
+  3. normalized (π·p derivation) vs literal Eq. 1 Value.
+
+Run:  PYTHONPATH=src python -m benchmarks.run faithfulness
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SynthConfig, synthetic_trace
+from repro.core.policies import LRUPolicy
+from repro.core.rac import make_rac
+
+from .common import N_SEEDS, TRACE_LEN, Timer, emit, run_setting, save_json
+
+
+def run(seeds=None):
+    variants = {
+        "RAC (full: lifetime+topicmem+normalized)": make_rac(),
+        "RAC value_mode=paper (Eq.1 literal)": make_rac(value_mode="paper"),
+        "RAC no topic memory (Alg.5 literal)": make_rac(topic_memory=False),
+        "RAC Eq.1 + no topic memory": make_rac(value_mode="paper",
+                                               topic_memory=False),
+        "LRU (reference)": lambda c, s: LRUPolicy(c, s),
+    }
+    rows = []
+    for seed in range(seeds or N_SEEDS):
+        tr = synthetic_trace(SynthConfig(trace_len=TRACE_LEN, seed=seed))
+        cap = max(8, int(0.10 * tr.meta["unique"]))
+        rows.append(run_setting(tr, cap, variants))
+    return {k: float(np.mean([r[k].hit_ratio for r in rows]))
+            for k in variants}
+
+
+def main():
+    with Timer() as t:
+        res = run()
+    for k, v in sorted(res.items(), key=lambda kv: -kv[1]):
+        emit(f"faithfulness/{k}", t.us / len(res), f"hit_ratio={v:.4f}")
+    save_json("faithfulness.json", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

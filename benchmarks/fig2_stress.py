@@ -1,0 +1,65 @@
+"""Paper Figure 2: hit ratio under the two synthetic stress axes.
+
+(a) long-reuse-distance ratio sweep 50%..90% (γ=0.7 fixed)
+(b) Zipf exponent sweep γ ∈ {0.7..1.2}  (long-reuse 50% fixed)
+
+Capacity 10% of the unique footprint (paper §4.2 RQ1 configuration).
+"""
+from __future__ import annotations
+
+from repro.core import SynthConfig, synthetic_trace
+
+from .common import (N_SEEDS, TRACE_LEN, Timer, agg, emit, factories,
+                     gains, run_setting, save_json)
+
+
+def reuse_distance(trace_len=None, seeds=None):
+    results = {}
+    for ratio in (0.5, 0.6, 0.7, 0.8, 0.9):
+        rows = []
+        for seed in range(seeds or N_SEEDS):
+            tr = synthetic_trace(SynthConfig(
+                trace_len=trace_len or TRACE_LEN, seed=seed,
+                long_reuse_ratio=ratio, zipf_gamma=0.7))
+            cap = max(8, int(0.10 * tr.meta["unique"]))
+            rows.append(run_setting(tr, cap, factories()))
+        m = agg(rows)
+        results[f"long={ratio}"] = {"means": m, **gains(m)}
+    return results
+
+
+def zipf_skew(trace_len=None, seeds=None):
+    results = {}
+    for gamma in (0.7, 0.8, 0.9, 1.0, 1.1, 1.2):
+        rows = []
+        for seed in range(seeds or N_SEEDS):
+            tr = synthetic_trace(SynthConfig(
+                trace_len=trace_len or TRACE_LEN, seed=seed,
+                long_reuse_ratio=0.5, zipf_gamma=gamma))
+            cap = max(8, int(0.10 * tr.meta["unique"]))
+            rows.append(run_setting(tr, cap, factories()))
+        m = agg(rows)
+        results[f"gamma={gamma}"] = {"means": m, **gains(m)}
+    return results
+
+
+def main():
+    with Timer() as t:
+        ra = reuse_distance()
+    for k, v in ra.items():
+        emit(f"fig2a/{k}", t.us / len(ra),
+             f"rac={v['rac']:.4f} best={v['best_baseline']:.4f} "
+             f"gain={100*v['gain_vs_best']:+.1f}%")
+    save_json("fig2a.json", ra)
+    with Timer() as t:
+        rb = zipf_skew()
+    for k, v in rb.items():
+        emit(f"fig2b/{k}", t.us / len(rb),
+             f"rac={v['rac']:.4f} best={v['best_baseline']:.4f} "
+             f"gain={100*v['gain_vs_best']:+.1f}%")
+    save_json("fig2b.json", rb)
+    return {"fig2a": ra, "fig2b": rb}
+
+
+if __name__ == "__main__":
+    main()

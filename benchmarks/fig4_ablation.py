@@ -1,0 +1,48 @@
+"""Paper Figure 4: ablation — RAC vs RAC w/o TP vs RAC w/o TSI across cache
+capacities 2.5%..20% (step 2.5%), plus the marginal gains ΔTP / ΔTSI."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SynthConfig, synthetic_trace
+from repro.core.rac import make_rac
+
+from .common import N_SEEDS, TRACE_LEN, Timer, emit, save_json
+from .common import run_setting
+
+
+def run(seeds=None):
+    facs = {
+        "RAC": make_rac(),
+        "RAC w/o TP": make_rac(use_tp=False),
+        "RAC w/o TSI": make_rac(use_tsi=False),
+    }
+    results = {}
+    for frac in np.arange(0.025, 0.2001, 0.025):
+        rows = []
+        for seed in range(seeds or N_SEEDS):
+            tr = synthetic_trace(SynthConfig(trace_len=TRACE_LEN, seed=seed))
+            cap = max(4, int(frac * tr.meta["unique"]))
+            rows.append(run_setting(tr, cap, facs))
+        m = {k: float(np.mean([r[k].hit_ratio for r in rows])) for k in facs}
+        results[f"cap={frac:.3f}"] = {
+            **m,
+            "delta_tp": m["RAC"] - m["RAC w/o TP"],
+            "delta_tsi": m["RAC"] - m["RAC w/o TSI"],
+        }
+    return results
+
+
+def main():
+    with Timer() as t:
+        res = run()
+    for k, v in res.items():
+        emit(f"fig4/{k}", t.us / len(res),
+             f"rac={v['RAC']:.4f} dTP={v['delta_tp']:+.4f} "
+             f"dTSI={v['delta_tsi']:+.4f}")
+    save_json("fig4.json", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Figure 5: parameter sensitivity at 10% capacity — routing
+threshold τ, TP decay α, structural weight λ."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SynthConfig, synthetic_trace
+from repro.core.rac import make_rac
+
+from .common import N_SEEDS, TRACE_LEN, Timer, emit, run_setting, save_json
+
+SWEEPS = {
+    "tau_route": [0.35, 0.45, 0.55, 0.65, 0.75, 0.85],
+    "alpha": [0.0001, 0.0003, 0.001, 0.003, 0.01, 0.03],
+    "lam": [0.0, 0.5, 1.0, 2.0, 4.0, 8.0],
+}
+
+
+def run(seeds=None):
+    traces = []
+    for seed in range(seeds or N_SEEDS):
+        tr = synthetic_trace(SynthConfig(trace_len=TRACE_LEN, seed=seed))
+        traces.append((tr, max(8, int(0.10 * tr.meta["unique"]))))
+    results = {}
+    for pname, values in SWEEPS.items():
+        curve = {}
+        for v in values:
+            hits = []
+            for tr, cap in traces:
+                fac = {f"RAC[{pname}={v}]": make_rac(**{pname: v})}
+                hits.append(next(iter(
+                    run_setting(tr, cap, fac).values())).hit_ratio)
+            curve[str(v)] = float(np.mean(hits))
+        results[pname] = curve
+    return results
+
+
+def main():
+    with Timer() as t:
+        res = run()
+    for pname, curve in res.items():
+        best = max(curve, key=curve.get)
+        worst = min(curve, key=curve.get)
+        emit(f"fig5/{pname}", t.us / len(res),
+             f"best {pname}={best} hr={curve[best]:.4f}; "
+             f"worst {pname}={worst} hr={curve[worst]:.4f}")
+    save_json("fig5.json", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Kernel micro-bench: Pallas (interpret mode on CPU — correctness-path
+timing only; TPU wall-times come from the roofline terms) vs the jnp
+reference, plus the oracle itself under jit."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit, save_json
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                                     # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    res = {}
+    # similarity top-1: serving-shaped (batch of 128 queries x 4k entries)
+    q = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((4096, 64)), jnp.float32)
+    res["sim_top1/pallas_interp"] = _time(
+        lambda a, b: ops.sim_top1(a, b), q, c)
+    res["sim_top1/xla_ref"] = _time(
+        jax.jit(lambda a, b: ref.sim_top1_ref(a, b, b.shape[0])), q, c)
+
+    b, h, hkv, s, d = 1, 4, 2, 512, 128
+    qa = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    ka = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    va = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    res["flash_attn/pallas_interp"] = _time(
+        lambda *x: ops.flash_attention(*x), qa, ka, va)
+    res["flash_attn/xla_ref"] = _time(
+        jax.jit(lambda *x: ref.attention_ref(*x)), qa, ka, va)
+
+    qd = jnp.asarray(rng.standard_normal((4, h, d)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((4, 2048, hkv, d)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((4, 2048, hkv, d)), jnp.float32)
+    pos = jnp.asarray([100, 500, 1500, 2000], jnp.int32)
+    res["decode_attn/pallas_interp"] = _time(
+        lambda *x: ops.decode_attention(*x), qd, kd, vd, pos)
+    res["decode_attn/xla_ref"] = _time(
+        jax.jit(lambda *x: ref.decode_attention_ref(*x)), qd, kd, vd, pos)
+
+    tsi = jnp.asarray(rng.random(4096), jnp.float32)
+    tid = jnp.asarray(rng.integers(0, 128, 4096), jnp.int32)
+    tp = jnp.asarray(rng.random(128), jnp.float32)
+    tl = jnp.asarray(rng.integers(0, 1000, 128), jnp.int32)
+    res["rac_value/pallas_interp"] = _time(
+        lambda *x: ops.rac_value(*x, 0.001, 1500), tsi, tid, tp, tl)
+    res["rac_value/xla_ref"] = _time(
+        jax.jit(lambda *x: ref.rac_value_ref(*x, 0.001, 1500)),
+        tsi, tid, tp, tl)
+    return res
+
+
+def main():
+    res = run()
+    for name, us in res.items():
+        emit(f"kernel/{name}", us, "interpret-mode CPU timing")
+    save_json("kernels.json", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

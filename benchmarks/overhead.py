@@ -1,0 +1,34 @@
+"""Per-request policy overhead (µs/request, host side) — the paper argues
+RAC is "lightweight to maintain online"; this quantifies it against every
+baseline under identical load."""
+from __future__ import annotations
+
+import time
+
+from repro.core import SynthConfig, run_policy, synthetic_trace
+
+from .common import Timer, emit, factories, save_json
+
+
+def run():
+    tr = synthetic_trace(SynthConfig(trace_len=6000, seed=0))
+    cap = max(8, int(0.10 * tr.meta["unique"]))
+    out = {}
+    for name, f in factories().items():
+        s = run_policy(tr, cap, f, name=name)
+        out[name] = {"us_per_request": 1e6 * s.wall_s / len(tr.requests),
+                     "hit_ratio": s.hit_ratio}
+    return out
+
+
+def main():
+    res = run()
+    for name, v in sorted(res.items(), key=lambda kv: kv[1]["us_per_request"]):
+        emit(f"overhead/{name}", v["us_per_request"],
+             f"hit_ratio={v['hit_ratio']:.4f}")
+    save_json("overhead.json", res)
+    return res
+
+
+if __name__ == "__main__":
+    main()

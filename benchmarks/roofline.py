@@ -1,0 +1,71 @@
+"""Roofline table reader: aggregates dry-run JSONL records (written by
+repro.launch.dryrun --out) into the §Roofline table."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit, save_json
+
+DEFAULT_PATHS = ("bench_results/dryrun.jsonl", "/tmp/dryrun_all.jsonl")
+
+
+def load(path=None):
+    paths = [path] if path else list(DEFAULT_PATHS)
+    recs = []
+    for p in paths:
+        if p and os.path.exists(p):
+            with open(p) as f:
+                for line in f:
+                    r = json.loads(line)
+                    if "error" not in r:
+                        recs.append(r)
+            break
+    # keep the latest record per cell (arch ids normalized: the CLI accepts
+    # both assignment ids "gemma-7b" and module ids "gemma_7b")
+    dedup = {}
+    for r in recs:
+        key = (r["arch"].replace("-", "_").replace(".", ""),
+               r["shape"], r["mesh"])
+        dedup[key] = r
+    return list(dedup.values())
+
+
+def table(recs):
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        t_bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append(dict(
+            cell=f"{r['arch']}×{r['shape']}×{r['mesh']}",
+            t_compute_ms=1e3 * r["t_compute"],
+            t_memory_ms=1e3 * r["t_memory"],
+            t_collective_ms=1e3 * r["t_collective"],
+            bottleneck=r["bottleneck"],
+            peak_gib=r["peak_bytes_per_device"] / 2**30,
+            useful_flop_frac=r.get("useful_flop_frac", float("nan")),
+            roofline_frac=(r["t_compute"] / t_bound) if t_bound else 0.0,
+        ))
+    return rows
+
+
+def main():
+    recs = load()
+    rows = table(recs)
+    if not rows:
+        emit("roofline/no-data", 0.0,
+             "run `python -m repro.launch.dryrun --all --out "
+             "bench_results/dryrun.jsonl` first")
+        return []
+    for r in rows:
+        emit(f"roofline/{r['cell']}", r["t_compute_ms"] * 1e3,
+             f"bottleneck={r['bottleneck']} "
+             f"t=[{r['t_compute_ms']:.1f},{r['t_memory_ms']:.1f},"
+             f"{r['t_collective_ms']:.1f}]ms "
+             f"roofline_frac={r['roofline_frac']:.3f} "
+             f"useful={r['useful_flop_frac']:.2f}")
+    save_json("roofline.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark entrypoint — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Full result tables land in
+``bench_results/*.json`` (consumed by EXPERIMENTS.md).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig2 fig4  # subset
+Env knobs: BENCH_SEEDS (default 3), BENCH_TRACE_LEN (default 10000).
+"""
+from __future__ import annotations
+
+import sys
+
+from . import (faithfulness, fig1_example, fig2_stress, fig3_real,
+               fig4_ablation, fig5_sensitivity, kernel_bench, overhead,
+               roofline)
+
+SUITES = {
+    "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
+    "fig2": fig2_stress.main,      # stress axes (paper Fig. 2a/2b)
+    "fig3": fig3_real.main,        # OASST-style capacities (Fig. 3)
+    "fig4": fig4_ablation.main,    # TP/TSI ablation (Fig. 4)
+    "fig5": fig5_sensitivity.main,  # parameter sensitivity (Fig. 5)
+    "faithfulness": faithfulness.main,  # reproduction-decision ablation
+    "overhead": overhead.main,     # per-request policy latency
+    "kernels": kernel_bench.main,  # Pallas kernel micro-bench
+    "roofline": roofline.main,     # dry-run roofline table
+}
+
+
+def main() -> None:
+    picks = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in picks:
+        SUITES[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end serving driver (the paper's deployment scenario): a small LM
+served with continuous batching behind a RAC-managed semantic cache.
+
+Replays an OASST-style dialogue trace; cache hits return the cached
+response with zero model compute, misses generate and admit under RAC
+eviction.  Also exercises the RAC-scored KV prefix-block manager.
+
+    PYTHONPATH=src python examples/serve_semantic_cache.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SynthConfig, synthetic_trace
+from repro.models import smoke_variant
+from repro.serving import EngineConfig, KVBlockManager, ServingEngine
+
+N_REQUESTS = 300
+CAPACITY = 96
+
+mcfg = smoke_variant(get_config("paper"))
+engine = ServingEngine(mcfg, EngineConfig(cache_capacity=CAPACITY,
+                                          max_new_tokens=8, max_batch=8,
+                                          max_seq=96))
+
+# multi-turn sessions with recurring topic anchors (the paper's workload)
+trace = synthetic_trace(SynthConfig(trace_len=N_REQUESTS, n_topics=24,
+                                    seed=1))
+rng = np.random.default_rng(1)
+requests = [(r.cid, r.emb,
+             list(rng.integers(2, mcfg.vocab_size, size=6)))
+            for r in trace.requests]
+
+t0 = time.perf_counter()
+done = engine.run(requests)
+dt = time.perf_counter() - t0
+s = engine.stats
+hr = s["hits"] / max(1, s["hits"] + s["misses"])
+print(f"[semantic-cache] {len(done)} requests in {dt:.1f}s")
+print(f"  hit_ratio={hr:.3f}  hits={s['hits']}  misses={s['misses']}")
+print(f"  generated {s['generated_tokens']} tokens in {s['batches']} "
+      f"batched decode steps")
+saved = s["hits"] * 8
+print(f"  generation saved by the cache ≈ {saved} tokens "
+      f"({saved / max(1, saved + s['generated_tokens']):.1%})")
+
+# --- KV prefix-block reuse under RAC scoring --------------------------
+print("\n[kv-prefix] RAC-scored radix block manager:")
+mgr = KVBlockManager(n_blocks=48, block_tokens=8)
+hot_prefix = list(range(32))                 # a popular system prompt
+hit_tokens = total_tokens = 0
+for i in range(120):
+    if rng.random() < 0.4:
+        conv = hot_prefix + list(rng.integers(500, 1000, size=16))
+    else:
+        conv = list(range(1000 + 64 * i, 1000 + 64 * i + 48))
+    r = mgr.on_request(conv)
+    hit_tokens += r["hit_tokens"]
+    total_tokens += len(conv)
+print(f"  prefix tokens served from cache: {hit_tokens}/{total_tokens} "
+      f"({hit_tokens / total_tokens:.1%}); blocks used {mgr.used}/48")

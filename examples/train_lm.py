@@ -1,0 +1,22 @@
+"""Train a reduced smollm-family LM for a few hundred steps on CPU with the
+full production loop: deterministic data pipeline, AdamW + cosine schedule,
+atomic checkpointing, restart-resume.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import tempfile
+
+from repro.launch.train import main as train_main
+
+with tempfile.TemporaryDirectory() as ckpt:
+    print("=== phase 1: steps 0-149 (checkpoint every 50) ===")
+    train_main(["--arch", "smollm-360m", "--smoke", "--steps", "300",
+                "--stop-at", "150", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", ckpt, "--ckpt-every", "50",
+                "--log-every", "25"])
+    print("=== phase 2: restart from the checkpoint, steps 150-299 ===")
+    losses = train_main(["--arch", "smollm-360m", "--smoke", "--steps",
+                         "300", "--batch", "8", "--seq", "128",
+                         "--ckpt-dir", ckpt, "--ckpt-every", "100",
+                         "--log-every", "25"])
+print(f"final loss {losses[-1]:.4f}")

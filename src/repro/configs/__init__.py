@@ -1,0 +1,85 @@
+"""Assigned architecture configs (exact assignment numbers) + the paper's
+serving config.  ``get_config(arch_id)`` returns the full ModelConfig;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch × shape) cell — no device allocation.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+ARCH_IDS = [
+    "gemma_7b", "qwen15_110b", "smollm_360m", "nemotron4_340b",
+    "deepseek_v2_lite_16b", "grok1_314b", "hymba_15b", "xlstm_125m",
+    "whisper_medium", "internvl2_26b",
+]
+
+# canonical assignment ids -> module names
+ALIASES = {
+    "gemma-7b": "gemma_7b",
+    "qwen1.5-110b": "qwen15_110b",
+    "smollm-360m": "smollm_360m",
+    "nemotron-4-340b": "nemotron4_340b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "grok-1-314b": "grok1_314b",
+    "hymba-1.5b": "hymba_15b",
+    "xlstm-125m": "xlstm_125m",
+    "whisper-medium": "whisper_medium",
+    "internvl2-26b": "internvl2_26b",
+    "paper": "paper",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def shape_cells(cfg: ModelConfig) -> list[str]:
+    """The assigned shape cells this arch runs (skips noted in DESIGN.md)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStructs for every model input of this cell (weak-type
+    correct, shardable, no allocation).  For decode shapes the KV/state
+    cache structs are included under "cache"."""
+    from repro.models.model import Model
+
+    sc: ShapeConfig = SHAPES[shape]
+    b, s = sc.global_batch, sc.seq_len
+    i32 = jnp.int32
+    specs: dict = {}
+    if sc.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif sc.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token against a cache of seq_len
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((b,), i32)
+        specs["cache"] = Model(cfg).cache_shape_structs(b, s)
+    if cfg.frontend == "audio":
+        if sc.kind == "decode":
+            # encoder ran at prefill; decode consumes its cached output
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), cfg.cdtype)
+        else:
+            specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), cfg.cdtype)
+    if cfg.frontend == "vision" and sc.kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), cfg.cdtype)
+    return specs

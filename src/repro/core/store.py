@@ -1,0 +1,61 @@
+"""Slot-based resident-entry store shared by the simulator and policies.
+
+Keeps a dense numpy slab of resident embeddings for vectorized semantic hit
+determination (the `similarity_topk` Pallas kernel consumes the same layout
+on TPU), plus per-slot metadata arrays that relation-aware policies (RAC)
+score over in O(m) vectorized time.
+
+Entries are keyed by content id (``cid``): re-admitting content that was
+evicted earlier re-uses the same key, which matches query-level caching in
+the paper (one entry per unique query content).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ResidentStore:
+    def __init__(self, capacity: int, dim: int):
+        # one spare slot: Alg.1 inserts first, then evicts while |C| > C
+        self.capacity = capacity
+        n = capacity + 1
+        self.emb = np.zeros((n, dim), dtype=np.float32)
+        self.occ = np.zeros(n, dtype=bool)
+        self.cid = np.full(n, -1, dtype=np.int64)
+        self.slot_of: dict[int, int] = {}      # cid -> slot
+        self._free: list[int] = list(range(n - 1, -1, -1))
+
+    def __len__(self) -> int:
+        return len(self.slot_of)
+
+    def __contains__(self, cid: int) -> bool:
+        return cid in self.slot_of
+
+    def keys(self):
+        return self.slot_of.keys()
+
+    def insert(self, cid: int, emb: np.ndarray) -> int:
+        assert cid not in self.slot_of
+        slot = self._free.pop()
+        self.emb[slot] = emb
+        self.occ[slot] = True
+        self.cid[slot] = cid
+        self.slot_of[cid] = slot
+        return slot
+
+    def remove(self, cid: int) -> int:
+        slot = self.slot_of.pop(cid)
+        self.occ[slot] = False
+        self.cid[slot] = -1
+        self._free.append(slot)
+        return slot
+
+    # -- semantic hit determination (identical for every policy) -----------
+    def nearest(self, q: np.ndarray) -> tuple[int, float]:
+        """Top-1 resident by cosine similarity. Returns (cid, sim) or (-1, -inf)."""
+        if not self.slot_of:
+            return -1, float("-inf")
+        sims = self.emb @ q
+        sims[~self.occ] = -np.inf
+        s = int(np.argmax(sims))
+        return int(self.cid[s]), float(sims[s])

@@ -1,0 +1,67 @@
+"""Structural-importance ranking on the intra-topic dependency DAG.
+
+Implements the paper's Appendix 7.2: a PageRank/TextRank-style random walk
+with uniform restart on the *reversed* prerequisite edges, so importance
+propagates from dependents back to their context anchors.  The stationary
+distribution is computed by power iteration (Proposition 2).
+
+``pagerank_reversed`` is the pure-numpy oracle used by tests;
+``pagerank_power_jax`` is an equivalent jax.lax.while_loop formulation used
+by the device-side scoring path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pagerank_reversed(edges: list[tuple[int, int]], n: int,
+                      beta: float = 0.85, tol: float = 1e-10,
+                      max_iter: int = 200) -> np.ndarray:
+    """Stationary scores r(u) of the uniform-restart walk (Eq. 3/4).
+
+    ``edges`` are prerequisite links (u -> v): u is an anchor required by v.
+    The walk runs on reversed edges (v -> u): dependents push importance to
+    their anchors.  Dangling nodes jump uniformly.
+    """
+    if n == 0:
+        return np.zeros(0)
+    # build reversed adjacency: from v to u for each (u, v)
+    out_deg = np.zeros(n, dtype=np.int64)         # out-degree in reversed graph
+    for (u, v) in edges:
+        out_deg[v] += 1
+    r = np.full(n, 1.0 / n)
+    for _ in range(max_iter):
+        contrib = np.zeros(n)
+        # mass from dangling nodes (out_deg == 0 in reversed graph)
+        dangling = r[out_deg == 0].sum() / n
+        for (u, v) in edges:
+            contrib[u] += r[v] / out_deg[v]
+        r_new = (1.0 - beta) / n + beta * (contrib + dangling)
+        if np.abs(r_new - r).sum() < tol:
+            return r_new
+        r = r_new
+    return r
+
+
+def pagerank_power_jax(adj: "jax.Array", beta: float = 0.85,
+                       iters: int = 64) -> "jax.Array":
+    """JAX power iteration on a dense reversed-transition matrix.
+
+    ``adj[u, v] = 1`` iff prerequisite edge u -> v exists.  Returns r over n
+    nodes.  Used for batched on-device re-scoring of topic DAGs.
+    """
+    import jax.numpy as jnp
+    import jax
+
+    n = adj.shape[0]
+    out_deg = adj.sum(axis=0)                       # reversed out-degree of v
+    # column-stochastic transition P[u, v] = adj[u,v] / out_deg[v]
+    p = jnp.where(out_deg[None, :] > 0, adj / jnp.maximum(out_deg[None, :], 1), 0.0)
+    dang = (out_deg == 0).astype(adj.dtype)
+
+    def body(_, r):
+        spread = p @ r + (dang @ r) / n
+        return (1.0 - beta) / n + beta * spread
+
+    r0 = jnp.full((n,), 1.0 / n, dtype=adj.dtype)
+    return jax.lax.fori_loop(0, iters, body, r0)

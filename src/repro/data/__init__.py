@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, TokenPipeline
+
+__all__ = ["DataConfig", "TokenPipeline"]

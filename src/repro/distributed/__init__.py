@@ -1,0 +1,6 @@
+"""Distribution substrate: sharding rules, checkpointing, fault tolerance,
+gradient compression, logical-axis annotations."""
+from .api import lc, use_rules
+from .sharding import ShardingPlan
+
+__all__ = ["lc", "use_rules", "ShardingPlan"]

@@ -1,0 +1,79 @@
+"""Logical-axis sharding annotations.
+
+Models annotate activations with *logical* axis names (``"batch"``,
+``"heads"``, ``"ffn"``, ``"expert"``, …).  The launcher activates a rule set
+mapping logical names to mesh axes; outside a rule context the annotations
+are no-ops, so the same model code runs on a laptop and on a 512-chip mesh.
+
+    with use_rules(mesh, {"batch": ("pod", "data"), "heads": "model", ...}):
+        lowered = jax.jit(step).lower(...)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> tuple[Optional[Mesh], dict]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict[str, Union[str, tuple, None]]):
+    """Activate a logical->mesh axis mapping for constraints below."""
+    prev = _current()
+    _state.mesh, _state.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def logical_to_spec(axes: tuple[Optional[str], ...],
+                    rules: dict) -> P:
+    parts = []
+    used: set = set()
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        # one mesh axis may appear at most once in a PartitionSpec
+        if m is None:
+            parts.append(None)
+            continue
+        key = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+        if any(k in used for k in key):
+            parts.append(None)
+        else:
+            used.update(key)
+            parts.append(tuple(m) if isinstance(m, (tuple, list)) else m)
+    return P(*parts)
+
+
+def lc(x, *axes: Optional[str]):
+    """Logical constraint: shard ``x`` by logical axis names (no-op when no
+    rule context is active or shapes don't divide)."""
+    mesh, rules = _current()
+    if mesh is None or not rules:
+        return x
+    spec = logical_to_spec(axes, rules)
+    # skip constraints that don't divide the dims evenly
+    for dim, part in zip(x.shape, spec):
+        if part is None:
+            continue
+        n = 1
+        for ax in (part if isinstance(part, tuple) else (part,)):
+            n *= mesh.shape[ax]
+        if dim % n != 0:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_for(axes: tuple[Optional[str], ...]) -> P:
+    """Resolve logical axes to a PartitionSpec under the active rules."""
+    _, rules = _current()
+    return logical_to_spec(axes, rules)

@@ -1,0 +1,46 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+Large-scale distributed optimization trick (DESIGN.md §4): gradients are
+quantized per-tensor to int8 around a shared fp32 scale before the data-
+parallel all-reduce, and the quantization error is fed back into the next
+step's gradient (error-feedback keeps SGD/Adam convergence unbiased in
+expectation).  4× less DP collective traffic; optional — off by default.
+
+Pure functions so the launcher can jit them into the train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, residuals):
+    """Returns (quantized tree, scales tree, new residuals tree)."""
+    def one(g, r):
+        g_fb = g.astype(jnp.float32) + r
+        q, s = quantize_int8(g_fb)
+        deq = dequantize_int8(q, s)
+        return q, s, g_fb - deq
+    out = jax.tree.map(one, grads, residuals)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, r
+
+
+def decompress_grads(q, s):
+    return jax.tree.map(dequantize_int8, q, s)
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the serving hot spots, with jnp oracles.
+
+  - similarity_topk: semantic-cache hit determination (the paper's named
+    cost center) — tiled MXU matmul + running top-1 merge.
+  - flash_attention: causal GQA prefill attention (online softmax).
+  - decode_attention: one-token GQA decode over a KV cache.
+  - rac_value: device-side RAC Eq.1 scoring over the resident table.
+
+Public API: :mod:`repro.kernels.ops` (jit'd, padded, CPU interpret-mode
+fallback); oracles in :mod:`repro.kernels.ref`.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper pads inputs to kernel tile multiples, dispatches to the kernel
+(``interpret=True`` on CPU — the TPU path compiles the same kernels
+natively), and unpads the result.  ``use_pallas=False`` falls back to the
+ref oracle (used by the serving engine on CPU where interpret-mode overhead
+isn't worth it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .decode_attention import decode_attention_pallas
+from .flash_attention import BQ as _FA_BQ, flash_attention_pallas
+from .rac_value import BN as _RV_BN, rac_value_pallas
+from .similarity_topk import BC as _ST_BC, BQ as _ST_BQ, sim_top1_pallas
+
+
+def _is_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def sim_top1(queries, candidates, *, use_pallas: bool = True,
+             interpret: bool | None = None):
+    """Top-1 cosine retrieval: (Q,D)x(N,D) -> (vals (Q,), idx (Q,))."""
+    n_valid = candidates.shape[0]
+    if not use_pallas:
+        return ref.sim_top1_ref(queries, candidates, n_valid)
+    interp = _is_cpu() if interpret is None else interpret
+    qp = _pad_to(_pad_to(queries, 1, 128), 0, _ST_BQ)
+    cp = _pad_to(_pad_to(candidates, 1, 128), 0, _ST_BC)
+    vals, idx = sim_top1_pallas(qp.astype(jnp.float32),
+                                cp.astype(jnp.float32),
+                                n_valid, interpret=interp)
+    return vals[: queries.shape[0]], idx[: queries.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def flash_attention(q, k, v, *, use_pallas: bool = True,
+                    interpret: bool | None = None):
+    """Causal GQA flash attention.  q (B,H,S,D); k/v (B,Hkv,S,D)."""
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=True)
+    interp = _is_cpu() if interpret is None else interpret
+    s = q.shape[2]
+    qp = _pad_to(q, 2, _FA_BQ)
+    kp = _pad_to(k, 2, _FA_BQ)
+    vp = _pad_to(v, 2, _FA_BQ)
+    out = flash_attention_pallas(qp, kp, vp, interpret=interp)
+    return out[:, :, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q, k, v, pos, *, use_pallas: bool = True,
+                     interpret: bool | None = None):
+    """One-token GQA decode.  q (B,H,D); k/v (B,S,Hkv,D); pos (B,)."""
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, pos)
+    interp = _is_cpu() if interpret is None else interpret
+    return decode_attention_pallas(q, k, v, pos, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "t_now", "use_pallas",
+                                             "interpret"))
+def rac_value(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
+              use_pallas: bool = True, interpret: bool | None = None):
+    """RAC Eq.1 scoring over the resident table."""
+    if not use_pallas:
+        return ref.rac_value_ref(tsi, tid, tp_last, t_last, alpha, t_now)
+    interp = _is_cpu() if interpret is None else interpret
+    n = tsi.shape[0]
+    tp = _pad_to(tsi.astype(jnp.float32), 0, _RV_BN)
+    ti = _pad_to(tid.astype(jnp.int32), 0, _RV_BN)
+    out = rac_value_pallas(tp, ti, tp_last, t_last, alpha, t_now,
+                           interpret=interp)
+    return out[:n]

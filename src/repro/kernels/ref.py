@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sim_top1_ref(queries: jnp.ndarray, candidates: jnp.ndarray,
+                 n_valid: int):
+    """queries (Q,D), candidates (N,D) -> (max sim (Q,), argmax (Q,))."""
+    scores = queries.astype(jnp.float32) @ candidates.astype(jnp.float32).T
+    col = jnp.arange(candidates.shape[0])
+    scores = jnp.where(col[None, :] < n_valid, scores, -jnp.inf)
+    return scores.max(axis=1), scores.argmax(axis=1).astype(jnp.int32)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True):
+    """q (B,H,S,D); k/v (B,Hkv,S,D) -> (B,H,S,D).  fp32 softmax."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d) / jnp.sqrt(d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         pos: jnp.ndarray):
+    """q (B,H,D); k/v (B,S,Hkv,D); pos (B,) -> (B,H,D)."""
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) / jnp.sqrt(d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf)
+    valid = jnp.arange(s)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vf)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def rac_value_ref(tsi: jnp.ndarray, tid: jnp.ndarray, tp_last: jnp.ndarray,
+                  t_last: jnp.ndarray, alpha: float, t_now: int):
+    decay = jnp.exp2(-alpha * (t_now - t_last[tid]).astype(jnp.float32))
+    return decay * tp_last[tid].astype(jnp.float32) * tsi

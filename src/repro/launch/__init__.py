@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, profiler, train, serve.
+
+NOTE: import repro.launch.dryrun (or profile_cell) FIRST in a fresh process
+when you need the 512-device placeholder mesh — they set XLA_FLAGS before
+jax initializes.
+"""

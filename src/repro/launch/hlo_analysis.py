@@ -1,0 +1,136 @@
+"""Post-compile HLO analysis: collective-traffic extraction + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes-accessed but NOT collective
+bytes; we parse the compiled HLO text and sum the traffic of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+using ring-algorithm factors and the replica-group size.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN.md / assignment constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    bytes_result: int
+    group_size: int
+
+    @property
+    def link_bytes(self) -> float:
+        """Ring-algorithm bytes crossing any one chip's links."""
+        n, b = self.group_size, self.bytes_result
+        if n <= 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * b * (n - 1) / n
+        if self.kind == "all-gather":
+            return b * (n - 1) / n          # b = gathered result
+        if self.kind == "reduce-scatter":
+            return b * (n - 1)              # b = scattered result shard
+        if self.kind == "all-to-all":
+            return b * (n - 1) / n
+        if self.kind == "collective-permute":
+            return float(b)
+        return float(b)
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    out: list[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            gsize = int(gi.group(2)) if gi else 1
+        out.append(Collective(kind, _shape_bytes(shape_str), gsize))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device link bytes
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def row(self) -> dict:
+        return dict(flops=self.flops, hbm_bytes=self.hbm_bytes,
+                    coll_bytes=self.coll_bytes,
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective,
+                    bottleneck=self.bottleneck)
+
+
+def roofline_from_compiled(compiled, n_chips: int) -> Roofline:
+    """Trip-count-aware terms via the custom HLO walker (hlo_cost.py);
+    XLA's cost_analysis counts while bodies once, so scanned layer stacks
+    would otherwise under-report (see EXPERIMENTS.md §Dry-run notes)."""
+    from .hlo_cost import analyze
+    r = analyze(compiled.as_text())
+    return Roofline(flops=r["flops"], hbm_bytes=r["hbm_bytes"],
+                    coll_bytes=r["coll_bytes"], n_chips=n_chips)

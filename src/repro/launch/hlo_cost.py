@@ -1,0 +1,368 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — every
+``lax.scan`` (layer stacks, attention chunk loops) under-reports by its
+trip count.  The compiled HLO records ``known_trip_count`` per while op,
+so we walk the module recursively and multiply.
+
+Per-device terms extracted:
+  - flops:        2·M·N·K per dot (batch dims included), trip-aware
+  - coll_bytes:   ring-model link bytes per collective, trip-aware
+  - hbm_bytes:    Σ (operand + result bytes) over materialized (top-level
+                  or fusion-root) ops — the roofline HBM-traffic proxy
+
+Shapes in the partitioned module are per-device, so all terms are
+per-device automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-reduce-start", "all-gather-start",
+               "collective-permute-start", "reduce-scatter-start",
+               "all-to-all-start"}
+
+# Ops the TPU backend fuses into their consumers/producers — they don't
+# round-trip HBM, so the memory term skips them.  (The CPU backend leaves
+# them standalone, which would overstate TPU HBM traffic ~5-10×.)
+FUSED_ON_TPU = {
+    "add", "subtract", "multiply", "divide", "negate", "abs", "sign",
+    "convert", "broadcast", "reshape", "bitcast", "slice", "pad",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "power", "maximum", "minimum", "compare",
+    "select", "and", "or", "not", "xor", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "iota", "is-finite",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "copy",
+    "rng", "rng-bit-generator", "reverse", "real", "imag", "cosine", "sine",
+    "exp", "erf", "atan2", "remainder", "stochastic-convert", "reduce",
+    "map", "concatenate", "expm1", "log1p",
+    # TPU dots take arbitrary dimension numbers — the explicit layout
+    # transposes the CPU backend materializes don't exist there
+    "transpose",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) over all arrays in a (possibly tuple) shape."""
+    elems = total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _first_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+FUSED_REGION_TAG = "fused_attn"
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: list[str]
+    tail: str
+
+    @property
+    def meta(self) -> str:
+        m = _META_RE.search(self.tail)
+        return m.group(1) if m else ""
+
+    @property
+    def in_fused_region(self) -> bool:
+        return FUSED_REGION_TAG in self.meta
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[_Op]] = {}
+        self.op_shape: dict[str, str] = {}
+        self.op_fused: dict[str, bool] = {}
+        self.consumers_fused: dict[str, list[bool]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        # effective fused-region membership: explicit tag, or (CPU lowering
+        # artifacts) metadata-less ops whose data operands are all fused —
+        # propagated in SSA order, two rounds for short chains
+        op_code = {op.name: op.opcode
+                   for ops in self.comps.values() for op in ops}
+        neutral = {"constant", "iota", "parameter"}
+        for _ in range(2):
+            for ops in self.comps.values():
+                for op in ops:
+                    if op.in_fused_region:
+                        self.op_fused[op.name] = True
+                        continue
+                    if op.meta or op.opcode in neutral:
+                        self.op_fused.setdefault(op.name, False)
+                        continue
+                    data_ops = [o for o in op.operands
+                                if op_code.get(o) not in neutral]
+                    self.op_fused[op.name] = bool(data_ops) and all(
+                        self.op_fused.get(o, False) for o in data_ops)
+        for ops in self.comps.values():
+            for op in ops:
+                for o in op.operands:
+                    self.consumers_fused.setdefault(o, []).append(
+                        self.op_fused.get(op.name, False))
+        self._memo: dict[str, tuple[float, float, float]] = {}
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if cur is None or line.strip() == "}":
+                if line.strip() == "}":
+                    cur = None
+                continue
+            m = _NAME_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1)
+            rest = line[m.end():]
+            # shape: either a balanced-paren tuple (may contain /*index=N*/
+            # comments and layout braces) or a space-free array shape
+            if rest.startswith("("):
+                depth = 0
+                for i, ch in enumerate(rest):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            shape_str, rest = rest[:i + 1], rest[i + 1:]
+                            break
+                else:
+                    continue
+            else:
+                sp = rest.find(" ")
+                if sp < 0:
+                    continue
+                shape_str, rest = rest[:sp], rest[sp:]
+            om = _OPCODE_RE.match(rest)
+            if not om:
+                continue
+            opcode = om.group(1)
+            rest = rest[om.end():]
+            # operands: up to the matching close paren at depth 0
+            depth = 0
+            tail = ""
+            ops_str = rest
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    if depth == 0:
+                        ops_str = rest[:i]
+                        tail = rest[i + 1:]
+                        break
+                    depth -= 1
+            operands = re.findall(r"%([\w\.\-]+)", ops_str)
+            op = _Op(name, shape_str.strip(), opcode, operands, tail)
+            self.comps[cur].append(op)
+            self.op_shape[name] = op.shape_str
+
+    # ---------------------------------------------------------------- cost
+    def _dot_flops(self, op: _Op) -> float:
+        _, out_elems_bytes = _shape_elems_bytes(op.shape_str)
+        out_elems, _ = _shape_elems_bytes(op.shape_str)
+        lhs_shape = self.op_shape.get(op.operands[0], "") if op.operands else ""
+        dims = _first_dims(lhs_shape)
+        cm = _CDIMS_RE.search(op.tail)
+        contract = 1
+        if cm and dims:
+            for i in (int(x) for x in cm.group(1).split(",") if x):
+                if i < len(dims):
+                    contract *= dims[i]
+        return 2.0 * out_elems * contract
+
+    def _coll_bytes(self, op: _Op) -> float:
+        _, b = _shape_elems_bytes(op.shape_str)
+        gm = _GROUPS_RE.search(op.tail)
+        if gm:
+            n = len([x for x in gm.group(1).split(",") if x])
+        else:
+            gi = _GROUPS_IOTA_RE.search(op.tail)
+            n = int(gi.group(2)) if gi else 1
+        kind = op.opcode.replace("-start", "")
+        if n <= 1:
+            return 0.0
+        if kind == "all-reduce":
+            return 2.0 * b * (n - 1) / n
+        if kind == "all-gather":
+            return b * (n - 1) / n
+        if kind == "reduce-scatter":
+            return b * (n - 1)
+        if kind == "all-to-all":
+            return b * (n - 1) / n
+        return float(b)              # collective-permute
+
+    def _is_elementwise(self, comp: str) -> bool:
+        """True when a fusion body is pure elementwise/layout ops — the TPU
+        backend fuses such chains into neighbors (no HBM round-trip)."""
+        for op in self.comps.get(comp, []):
+            if op.opcode in ("parameter", "constant", "tuple",
+                             "get-tuple-element"):
+                continue
+            if op.opcode not in FUSED_ON_TPU:
+                return False
+        return True
+
+    def _root_kind(self, op: _Op) -> str:
+        """Effective opcode: for fusions, the dominant body op (layout and
+        elementwise wrappers like bitcast/convert don't change the class)."""
+        if op.opcode != "fusion":
+            return op.opcode
+        kinds = set()
+        for cm_ in _CALL_RE.finditer(op.tail):
+            for o in self.comps.get(cm_.group(1), []):
+                kinds.add(o.opcode)
+        for heavy in ("dot", "scatter", "gather", "sort", "reduce-window"):
+            if heavy in kinds:
+                return heavy
+        if "dynamic-update-slice" in kinds:
+            return "dynamic-update-slice"
+        if "dynamic-slice" in kinds:
+            return "dynamic-slice"
+        return op.opcode
+
+    def _op_traffic(self, op: _Op) -> float:
+        """HBM bytes of one materialized op.
+
+        - ``fused_attn``-scoped ops model the Pallas flash-attention kernel
+          (kernels/): interior tensors stay in VMEM, only region-boundary
+          traffic counts.
+        - dynamic-slice reads only the slice (2×result), NOT its full
+          operand; dynamic-update-slice writes only the update in place
+          (2×update) — naive operand counting would bill the whole stacked
+          scan carry per layer iteration.
+        """
+        hb = 0.0
+        if self.op_fused.get(op.name, False):
+            for o in op.operands:
+                if not self.op_fused.get(o, False):
+                    hb += _shape_elems_bytes(self.op_shape.get(o, ""))[1]
+            cons = self.consumers_fused.get(op.name, [])
+            if not cons or any(not c for c in cons):
+                hb += _shape_elems_bytes(op.shape_str)[1]
+            return hb
+        kind = self._root_kind(op)
+        if kind == "dynamic-slice":
+            return 2.0 * _shape_elems_bytes(op.shape_str)[1]
+        if kind == "dynamic-update-slice":
+            # in-place (donated) update: read+write the update tensor only;
+            # operands = [target, update, indices...] — indices are scalars
+            sizes = sorted(_shape_elems_bytes(self.op_shape.get(o, ""))[1]
+                           for o in op.operands)
+            sizes = [s for s in sizes if s > 64]    # drop index scalars
+            return 2.0 * (sizes[0] if sizes else
+                          _shape_elems_bytes(op.shape_str)[1])
+        hb += _shape_elems_bytes(op.shape_str)[1]
+        for o in op.operands:
+            hb += _shape_elems_bytes(self.op_shape.get(o, ""))[1]
+        return hb
+
+    def comp_cost(self, comp: str) -> tuple[float, float, float]:
+        """(flops, coll_bytes, hbm_bytes) for one computation, trip-aware."""
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = (0.0, 0.0, 0.0)      # cycle guard
+        fl = cb = hb = 0.0
+        for op in self.comps.get(comp, []):
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast", "after-all"):
+                continue
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.tail)
+                trips = int(tm.group(1)) if tm else 1
+                for cm_ in _CALL_RE.finditer(op.tail):
+                    f2, c2, h2 = self.comp_cost(cm_.group(1))
+                    fl += trips * f2
+                    cb += trips * c2
+                    hb += trips * h2
+                continue
+            if op.opcode in ("fusion", "call", "custom-call", "conditional",
+                             "sort", "scatter", "reduce-window",
+                             "select-and-scatter"):
+                # flops inside called computations (fusion bodies etc.)
+                materialized = op.opcode != "fusion"
+                for cm_ in _CALL_RE.finditer(op.tail):
+                    f2, c2, _ = self.comp_cost(cm_.group(1))
+                    fl += f2
+                    cb += c2
+                    if op.opcode == "fusion" and not self._is_elementwise(
+                            cm_.group(1)):
+                        materialized = True
+                if materialized:
+                    hb += self._op_traffic(op)
+                continue
+            if op.opcode == "dot":
+                fl += self._dot_flops(op)
+            elif op.opcode == "convolution":
+                # rare here: approximate as dot on result × guessed contract
+                out_e, _ = _shape_elems_bytes(op.shape_str)
+                fl += 2.0 * out_e * 128
+            elif op.opcode.replace("-start", "") in {
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"}:
+                cb += self._coll_bytes(op)
+            if op.opcode in FUSED_ON_TPU:
+                continue            # fused on TPU: no HBM round-trip
+            hb += self._op_traffic(op)
+        self._memo[comp] = (fl, cb, hb)
+        return self._memo[comp]
+
+    def entry_cost(self) -> tuple[float, float, float]:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    m = HloCostModel(hlo_text)
+    fl, cb, hb = m.entry_cost()
+    return {"flops": fl, "coll_bytes": cb, "hbm_bytes": hb}

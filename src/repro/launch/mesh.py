@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Production shapes:
+
+  - single pod:  (16, 16)        axes ("data", "model")  = 256 chips
+  - multi-pod:   (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+The dry-run spawns these over 512 XLA host-platform placeholder devices;
+on real hardware the same function builds the mesh over TPU devices with
+ICI-contiguous model axes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Degenerate 1-device mesh for laptop runs (same code path)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

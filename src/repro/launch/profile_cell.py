@@ -1,0 +1,94 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("DRYRUN_DEVICES", "512")).strip()
+"""Dry-run profiler for §Perf hillclimbing: per-opcode / per-metadata
+breakdown of the roofline terms of one (arch × shape) cell.
+
+    PYTHONPATH=src python -m repro.launch.profile_cell --arch qwen1.5-110b \
+        --shape decode_32k [--by meta|opcode] [--top 15]
+"""
+import argparse
+from collections import Counter
+
+
+def profile(arch: str, shape: str, multi_pod: bool = False,
+            top: int = 15, by: str = "opcode"):
+    import repro.launch.hlo_cost as hc
+    from repro.launch.dryrun import _build_compiled
+
+    compiled, ctx = _build_compiled(arch, shape, multi_pod)
+    m = hc.HloCostModel(compiled.as_text())
+    traffic: Counter = Counter()
+    flops: Counter = Counter()
+    colls: Counter = Counter()
+
+    def key(op):
+        if by == "meta":
+            meta = op.meta
+            # keep the trailing (most specific) scopes
+            return "/".join(meta.split("/")[-3:]) if meta else f"({op.opcode})"
+        return op.opcode
+
+    def walk(comp, mult=1.0):
+        for op in m.comps.get(comp, []):
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast", "after-all"):
+                continue
+            if op.opcode == "while":
+                tm = hc._TRIP_RE.search(op.tail)
+                trips = int(tm.group(1)) if tm else 1
+                for cm in hc._CALL_RE.finditer(op.tail):
+                    walk(cm.group(1), mult * trips)
+                continue
+            if op.opcode in ("fusion", "call", "custom-call", "conditional",
+                             "sort", "scatter", "reduce-window",
+                             "select-and-scatter"):
+                mat = op.opcode != "fusion"
+                for cm in hc._CALL_RE.finditer(op.tail):
+                    f2, c2, _ = m.comp_cost(cm.group(1))
+                    flops[key(op)] += mult * f2
+                    colls[key(op)] += mult * c2
+                    if op.opcode == "fusion" and not m._is_elementwise(
+                            cm.group(1)):
+                        mat = True
+                if mat:
+                    traffic[key(op)] += mult * m._op_traffic(op)
+                continue
+            if op.opcode == "dot":
+                flops[key(op)] += mult * m._dot_flops(op)
+            elif op.opcode.replace("-start", "") in {
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"}:
+                colls[key(op)] += mult * m._coll_bytes(op)
+            if op.opcode in hc.FUSED_ON_TPU:
+                continue
+            traffic[key(op)] += mult * m._op_traffic(op)
+
+    walk(m.entry)
+    print(f"== {arch} × {shape} ({'2x16x16' if multi_pod else '16x16'}) ==")
+    print(f"-- HBM traffic by {by} (GB/device/step) --")
+    for k, v in traffic.most_common(top):
+        print(f"  {v/1e9:10.1f}  {k}")
+    print(f"-- flops by {by} (G) --")
+    for k, v in flops.most_common(top):
+        print(f"  {v/1e9:10.1f}  {k}")
+    print(f"-- collective link-bytes by {by} (GB) --")
+    for k, v in colls.most_common(top):
+        print(f"  {v/1e9:10.1f}  {k}")
+    return traffic, flops, colls
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--by", default="opcode", choices=["opcode", "meta"])
+    ap.add_argument("--top", type=int, default=15)
+    a = ap.parse_args()
+    profile(a.arch, a.shape, a.multi_pod, a.top, a.by)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, smoke_variant
+from .model import Model, build_model
+from .steps import (make_decode_step, make_loss_fn, make_prefill_step,
+                    make_train_step)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "smoke_variant", "Model",
+           "build_model", "make_loss_fn", "make_train_step",
+           "make_prefill_step", "make_decode_step"]

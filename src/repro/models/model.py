@@ -1,0 +1,378 @@
+"""Model assembly: decoder-only LMs (dense / MoE / MLA / hybrid / xLSTM),
+encoder-decoder (whisper) and VLM (frontend-stub) backbones.
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so HLO size
+and compile time are layer-count independent; each scanned block is
+optionally rematerialized (``cfg.remat``) for training memory.
+
+Three entry points per model (built by :func:`build_model`):
+  - ``forward(params, batch)``          -> logits  (teacher-forced, causal)
+  - ``prefill(params, batch)``          -> (last-position logits, cache)
+  - ``decode_step(params, cache, batch)`` -> (logits, cache)  (one token)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.distributed.api import lc  # logical sharding constraint (no-op
+                                      # outside a mesh-rule context)
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+
+# --------------------------------------------------------------- embeddings
+def init_embeddings(cfg: ModelConfig, rng) -> dict:
+    k1, k2 = jax.random.split(rng)
+    p = {"tok": jax.random.normal(k1, (cfg.padded_vocab, cfg.d_model),
+                                  cfg.pdtype) * 0.02,
+         "norm_f": L._norm_init(cfg.d_model, cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(
+            k2, (cfg.d_model, cfg.padded_vocab), cfg.pdtype) * 0.02
+    return p
+
+
+def embed(p: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(p["tok"].astype(cfg.cdtype), tokens, axis=0)
+    return lc(x, "batch", "seq", None)
+
+
+def unembed(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = lc(x, "batch", "seq", None)     # gather SP residual before the head
+    x = L.rmsnorm(p["norm_f"], x, cfg.norm_eps)
+    w = (p["tok"].T if cfg.tie_embeddings else p["unembed"]).astype(cfg.cdtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return lc(logits, "batch", "seq", "vocab")
+
+
+# ------------------------------------------------------------------ blocks
+def init_block(cfg: ModelConfig, rng) -> dict:
+    """One decoder block's params (family-dependent)."""
+    ks = jax.random.split(rng, 6)
+    p: dict[str, Any] = {"ln1": L._norm_init(cfg.d_model, cfg.pdtype),
+                         "ln2": L._norm_init(cfg.d_model, cfg.pdtype)}
+    if cfg.family == "ssm":
+        # xLSTM: both cell kinds present; per-layer selector picks one
+        p["mlstm"] = S.init_mlstm(cfg, ks[0])
+        p["slstm"] = S.init_slstm(cfg, ks[1])
+        return p
+    if cfg.attention == "mla":
+        p["attn"] = L.init_mla(cfg, ks[0])
+    elif cfg.attention != "none":
+        p["attn"] = L.init_attention(cfg, ks[0])
+    if cfg.family == "hybrid" and cfg.ssm_state > 0:
+        p["mamba"] = S.init_mamba(cfg, ks[1])
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(cfg, ks[2])
+    elif cfg.d_ff > 0:
+        p["mlp"] = L.init_mlp(cfg, ks[2])
+    return p
+
+
+def block_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, decode_mask=None,
+                cache: Optional[dict] = None, cache_pos=None,
+                layer_is_slstm=None):
+    """Returns (x, new_cache).  decode_mask (B,T) marks valid cache slots
+    (decode only); train/prefill masks are banded on the fly."""
+    # TP-region input: gathered to FULL sequence exactly once here (Megatron
+    # SP boundary); qkv/MLP dots consume it locally, outputs reduce-scatter
+    # back into the seq-sharded residual (§Perf: constraining h to stay
+    # seq-sharded made every projection gather independently — 3× traffic)
+    h = lc(L.rmsnorm(p["ln1"], x, cfg.norm_eps), "batch", "seq", "dmodel")
+    h = jax.ad_checkpoint.checkpoint_name(h, "blk_attn_in")
+    window = cfg.sliding_window if cfg.attention == "sliding" else 0
+    new_cache: dict = {}
+    if cfg.family == "ssm":
+        m_out, m_state = S.mlstm_apply(p["mlstm"], cfg, h,
+                                       None if cache is None else cache["mlstm"])
+        s_out, s_state = S.slstm_apply(p["slstm"], cfg, h,
+                                       None if cache is None else cache["slstm"])
+        sel = layer_is_slstm.astype(h.dtype)
+        attn_out = sel * s_out + (1 - sel) * m_out
+        new_cache = {"mlstm": m_state, "slstm": s_state}
+    elif cfg.family == "hybrid":
+        a_out, kv = L.attention_apply(
+            p["attn"], cfg, h, positions, window=window,
+            kv_cache=None if cache is None else cache["kv"],
+            cache_positions=cache_pos, decode_mask=decode_mask)
+        mb_out, mb_state = S.mamba_apply(
+            p["mamba"], cfg, h, None if cache is None else cache["mamba"])
+        attn_out = 0.5 * (a_out + mb_out)          # parallel heads (hymba)
+        new_cache = {"kv": kv, "mamba": mb_state}
+    elif cfg.attention == "mla":
+        attn_out, kv = L.mla_apply(p["attn"], cfg, h, positions,
+                                   kv_cache=None if cache is None else cache["kv"],
+                                   cache_positions=cache_pos,
+                                   decode_mask=decode_mask)
+        new_cache = {"kv": kv}
+    else:
+        attn_out, kv = L.attention_apply(
+            p["attn"], cfg, h, positions, window=window,
+            kv_cache=None if cache is None else cache["kv"],
+            cache_positions=cache_pos, decode_mask=decode_mask)
+        new_cache = {"kv": kv}
+    # residual stream is sequence-sharded between TP regions (Megatron SP);
+    # "seq_sp" maps to the model axis for train/prefill of wide models
+    x = lc(x + attn_out, "batch", "seq_sp", "dmodel")
+    h2 = lc(L.rmsnorm(p["ln2"], x, cfg.norm_eps), "batch", "seq", "dmodel")
+    h2 = jax.ad_checkpoint.checkpoint_name(h2, "blk_mlp_in")
+    if cfg.is_moe:
+        x = x + L.moe_apply(p["moe"], cfg, h2)
+    elif cfg.d_ff > 0:
+        x = x + L.mlp_apply(p["mlp"], cfg, h2)
+    return lc(x, "batch", "seq_sp", "dmodel"), new_cache
+
+
+# ----------------------------------------------------------- encoder blocks
+def init_enc_block(cfg: ModelConfig, rng) -> dict:
+    ks = jax.random.split(rng, 2)
+    return {"ln1": L._norm_init(cfg.d_model, cfg.pdtype),
+            "ln2": L._norm_init(cfg.d_model, cfg.pdtype),
+            "attn": L.init_attention(cfg, ks[0]),
+            "mlp": L.init_mlp(cfg, ks[1])}
+
+
+def enc_block_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, _ = L.attention_apply(p["attn"], cfg, h, positions, causal=False)
+    x = x + a
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], cfg, h2)
+
+
+def init_xattn_block(cfg: ModelConfig, rng) -> dict:
+    ks = jax.random.split(rng, 3)
+    return {"ln1": L._norm_init(cfg.d_model, cfg.pdtype),
+            "lnx": L._norm_init(cfg.d_model, cfg.pdtype),
+            "ln2": L._norm_init(cfg.d_model, cfg.pdtype),
+            "attn": L.init_attention(cfg, ks[0]),
+            "xattn": L.init_attention(cfg, ks[1]),
+            "mlp": L.init_mlp(cfg, ks[2])}
+
+
+def xattn_block_apply(p: dict, cfg: ModelConfig, x, positions,
+                      decode_mask, enc_out, cache=None, cache_pos=None):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kv = L.attention_apply(p["attn"], cfg, h, positions,
+                              kv_cache=None if cache is None else cache["kv"],
+                              cache_positions=cache_pos,
+                              decode_mask=decode_mask)
+    x = lc(x + a, "batch", "seq_sp", "dmodel")
+    hx = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+    xa, _ = L.attention_apply(p["xattn"], cfg, hx, positions, causal=False,
+                              use_rope=False, xattn_kv=enc_out)
+    x = lc(x + xa, "batch", "seq_sp", "dmodel")
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], cfg, h2)
+    return lc(x, "batch", "seq_sp", "dmodel"), {"kv": kv}
+
+
+# ------------------------------------------------------------------- Model
+class Model:
+    """Family-dispatching functional model."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        k_emb, k_blocks, k_enc = jax.random.split(rng, 3)
+        params = {"emb": init_embeddings(cfg, k_emb)}
+        block_init = init_xattn_block if cfg.n_enc_layers else init_block
+        kd = jax.random.split(k_blocks, cfg.n_layers)
+        if cfg.scan_layers:
+            params["blocks"] = jax.vmap(lambda k: block_init(cfg, k))(kd)
+        else:
+            params["blocks"] = [block_init(cfg, k) for k in kd]
+        if cfg.n_enc_layers:
+            ks = jax.random.split(k_enc, cfg.n_enc_layers)
+            if cfg.scan_layers:
+                params["enc"] = jax.vmap(lambda k: init_enc_block(cfg, k))(ks)
+            else:
+                params["enc"] = [init_enc_block(cfg, k) for k in ks]
+        return params
+
+    def init_shapes(self, rng=None) -> dict:
+        """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, rng)
+
+    # -- helpers ------------------------------------------------------
+    def _slstm_mask(self) -> jnp.ndarray:
+        m = jnp.zeros((self.cfg.n_layers, 1, 1, 1))
+        for i in self.cfg.slstm_at:
+            m = m.at[i].set(1.0)
+        return m
+
+    def _run_stack(self, params, x, positions, decode_mask=None, cache=None,
+                   cache_pos=None, enc_out=None):
+        cfg = self.cfg
+        slstm_sel = self._slstm_mask() if cfg.family == "ssm" else None
+
+        def body(carry_x, scanned):
+            layer_p, layer_cache, sel = scanned
+            if enc_out is not None:
+                out, new_c = xattn_block_apply(layer_p, cfg, carry_x, positions,
+                                               decode_mask, enc_out,
+                                               layer_cache, cache_pos)
+            else:
+                out, new_c = block_apply(layer_p, cfg, carry_x, positions,
+                                         decode_mask, layer_cache, cache_pos,
+                                         layer_is_slstm=sel)
+            return out, new_c
+
+        if cfg.scan_layers:
+            fn = body
+            if cfg.remat:
+                policy = (jax.checkpoint_policies.save_only_these_names(
+                    "blk_attn_in", "blk_mlp_in")
+                    if cfg.remat_policy == "save_boundaries" else None)
+                fn = jax.checkpoint(body, prevent_cse=False, policy=policy)
+            sel = (slstm_sel if slstm_sel is not None
+                   else jnp.zeros((cfg.n_layers, 1, 1, 1)))
+            x, new_cache = jax.lax.scan(
+                lambda c, s: fn(c, s), x,
+                (params["blocks"], cache, sel))
+            return x, new_cache
+        new_caches = []
+        for i in range(cfg.n_layers):
+            layer_cache = None if cache is None else jax.tree.map(
+                lambda a: a[i], cache)
+            sel = (slstm_sel[i] if slstm_sel is not None else jnp.zeros((1, 1, 1)))
+            x, nc = body(x, (params["blocks"][i], layer_cache, sel))
+            new_caches.append(nc)
+        if new_caches and new_caches[0]:
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        else:
+            new_cache = None
+        return x, new_cache
+
+    def _encode(self, params, audio_embeds):
+        cfg = self.cfg
+        x = audio_embeds.astype(cfg.cdtype)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     x.shape[:2])
+        if cfg.scan_layers:
+            def body(carry, layer_p):
+                return enc_block_apply(layer_p, cfg, carry, positions), None
+            x, _ = jax.lax.scan(body, x, params["enc"])
+        else:
+            for i in range(cfg.n_enc_layers):
+                x = enc_block_apply(params["enc"][i], cfg, x, positions)
+        return x
+
+    # -- full-sequence forward (train) --------------------------------
+    def forward(self, params, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s_len = tokens.shape
+        x = embed(params["emb"], cfg, tokens)
+        if cfg.family == "vlm":
+            img = batch["image_embeds"].astype(cfg.cdtype)
+            n_img = img.shape[1]
+            assert n_img <= s_len, (
+                f"vlm: {n_img} image tokens exceed seq_len {s_len}")
+            x = jnp.concatenate([img, x[:, n_img:]], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(s_len)[None], (b, s_len))
+        enc_out = None
+        if cfg.n_enc_layers:
+            enc_out = self._encode(params, batch["audio_embeds"])
+        x, _ = self._run_stack(params, x, positions, cache=None,
+                               enc_out=enc_out)
+        return unembed(params["emb"], cfg, x)
+
+    # -- caches --------------------------------------------------------
+    def cache_spec(self, batch: int, max_seq: int) -> dict:
+        """Shapes/dtypes of the decode cache (per layer, stacked on L)."""
+        cfg = self.cfg
+        kd = jnp.dtype(cfg.compute_dtype)
+        ls = cfg.n_layers
+
+        def stack(shape):
+            return (ls, *shape)
+        if cfg.family == "ssm":
+            spec = {"mlstm": {k: (stack(v), jnp.float32)
+                              for k, v in S.mlstm_state_shape(cfg, batch).items()},
+                    "slstm": {k: (stack(v), jnp.float32)
+                              for k, v in S.slstm_state_shape(cfg, batch).items()}}
+            return spec
+        if cfg.family == "hybrid":
+            w = min(cfg.sliding_window or max_seq, max_seq)
+            spec = {"kv": {"k": (stack((batch, w, cfg.n_kv_heads, cfg.hd)), kd),
+                           "v": (stack((batch, w, cfg.n_kv_heads, cfg.hd)), kd)},
+                    "mamba": {k: (stack(v), jnp.float32)
+                              for k, v in S.mamba_state_shape(cfg, batch).items()}}
+            return spec
+        if cfg.attention == "mla":
+            return {"kv": {"c_kv": (stack((batch, max_seq, cfg.kv_lora_rank)), kd),
+                           "k_rope": (stack((batch, max_seq, cfg.rope_head_dim)), kd)}}
+        return {"kv": {"k": (stack((batch, max_seq, cfg.n_kv_heads, cfg.hd)), kd),
+                       "v": (stack((batch, max_seq, cfg.n_kv_heads, cfg.hd)), kd)}}
+
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        return jax.tree.map(lambda sd: jnp.zeros(sd[0], sd[1]),
+                            self.cache_spec(batch, max_seq),
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 2 and isinstance(x[0], tuple))
+
+    def cache_shape_structs(self, batch: int, max_seq: int):
+        return jax.tree.map(lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]),
+                            self.cache_spec(batch, max_seq),
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 2 and isinstance(x[0], tuple))
+
+    # -- decode --------------------------------------------------------
+    def decode_step(self, params, cache, batch: dict):
+        """One-token decode.  batch: tokens (B,1), pos (B,) current position,
+        plus enc/vlm extras.  Cache is functional (returned updated)."""
+        cfg = self.cfg
+        tokens, pos = batch["tokens"], batch["pos"]
+        b = tokens.shape[0]
+        x = embed(params["emb"], cfg, tokens)
+        positions = pos[:, None]
+        # enc-dec decode: encoder output was computed once at prefill and is
+        # carried alongside the cache (real engines cache cross-attn KV)
+        enc_out = batch.get("enc_out")
+
+        if cfg.family == "ssm":
+            decode_mask = None
+            cache_pos = None
+        elif cfg.family == "hybrid":
+            # ring-buffer window cache: slot i holds absolute position
+            # p ≡ i (mod W); mask stale/unwritten/out-of-window slots
+            w = cache["kv"]["k"].shape[2]
+            cache_pos = jnp.mod(pos, w)
+            slot_age = jnp.mod(pos[:, None] - jnp.arange(w)[None], w)
+            valid = (pos[:, None] - slot_age) >= 0
+            within = slot_age < (cfg.sliding_window or 10**9)
+            decode_mask = valid & within                  # (B, W)
+        else:
+            max_seq = (cache["kv"]["k"].shape[2] if cfg.attention != "mla"
+                       else cache["kv"]["c_kv"].shape[2])
+            cache_pos = pos
+            decode_mask = jnp.arange(max_seq)[None] <= pos[:, None]  # (B,S)
+        x, new_cache = self._run_stack(params, x, positions, decode_mask,
+                                       cache=cache, cache_pos=cache_pos,
+                                       enc_out=enc_out)
+        logits = unembed(params["emb"], cfg, x)
+        return logits[:, 0], new_cache
+
+    # -- prefill -------------------------------------------------------
+    def prefill(self, params, batch: dict):
+        """Teacher-forced pass returning last-position logits (the cache
+        write-back for prefill is exercised via decode; prefill measures the
+        compute cost of context ingestion, which dominates)."""
+        logits = self.forward(params, batch)
+        return logits[:, -1]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,266 @@
+"""State-space / recurrent blocks: Mamba-style selective SSM (hymba's
+parallel heads) and xLSTM's mLSTM / sLSTM cells.
+
+Training uses ``jax.lax.associative_scan`` (Mamba) or ``jax.lax.scan``
+(xLSTM) over the sequence; decode is a single O(1) state update — the
+property that makes these archs eligible for the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.api import lc
+from .config import ModelConfig
+
+
+# ------------------------------------------------------------------ Mamba
+def init_mamba(cfg: ModelConfig, rng) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    k = jax.random.split(rng, 7)
+    s = 0.02
+    return {
+        "w_in": jax.random.normal(k[0], (d, 2 * di), cfg.pdtype) * s,
+        "conv": jax.random.normal(k[1], (cfg.ssm_conv, di), cfg.pdtype) * s,
+        "w_bc": jax.random.normal(k[2], (di, 2 * n), cfg.pdtype) * s,
+        "w_dt": jax.random.normal(k[3], (di, di), cfg.pdtype) * (s / 4),
+        "b_dt": jnp.full((di,), -4.6, cfg.pdtype),   # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(k[5], (di, d), cfg.pdtype) * s,
+    }
+
+
+def _mamba_core(p, cfg, xz, conv_state=None, ssm_state=None):
+    """Shared pre-SSM computation.  xz: (B,S,2*di).  Returns scan inputs."""
+    cd = cfg.cdtype
+    di = cfg.ssm_expand * cfg.d_model
+    x, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv over seq
+    kw = p["conv"].astype(cd)                       # (K, di)
+    if conv_state is None:
+        pad = jnp.pad(x, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+        xc = sum(pad[:, i:i + x.shape[1]] * kw[i] for i in range(cfg.ssm_conv))
+        new_conv = pad[:, -(cfg.ssm_conv - 1):] if cfg.ssm_conv > 1 else None
+    else:
+        # decode: conv_state (B, K-1, di) holds the previous inputs
+        window = jnp.concatenate([conv_state.astype(cd), x], axis=1)
+        xc = (window * kw[None]).sum(axis=1, keepdims=True)
+        new_conv = window[:, 1:]
+    xc = jax.nn.silu(xc)
+    bc = jnp.einsum("bsd,dn->bsn", xc, p["w_bc"].astype(cd))
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)        # (B,S,N) each
+    dt = jax.nn.softplus(jnp.einsum("bsd,de->bse", xc, p["w_dt"].astype(cd))
+                         + p["b_dt"].astype(cd))    # (B,S,di)
+    a = -jnp.exp(p["a_log"])                        # (di, N) fp32
+    return x, z, xc, b_ssm, c_ssm, dt, a, new_conv
+
+
+def mamba_apply(p: dict, cfg: ModelConfig, x_in: jnp.ndarray,
+                state: Optional[dict] = None):
+    """state=None: full-sequence training/prefill via associative scan.
+    state=dict(conv=(B,K-1,di), ssm=(B,di,N)): one-step decode."""
+    cd = cfg.cdtype
+    xz = jnp.einsum("bsd,de->bse", x_in, p["w_in"].astype(cd))
+    if state is None:
+        x, z, xc, b_ssm, c_ssm, dt, a, new_conv = _mamba_core(p, cfg, xz)
+        # elements: (decay (B,S,di,N), input (B,S,di,N))
+        da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)          # decay
+        dbx = (dt.astype(jnp.float32)[..., None]
+               * b_ssm.astype(jnp.float32)[:, :, None, :]
+               * xc.astype(jnp.float32)[..., None])
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+        decays, hs = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm.astype(jnp.float32))
+        y = y + xc.astype(jnp.float32) * p["d_skip"]
+        new_state = {"conv": new_conv,
+                     "ssm": hs[:, -1]} if cfg.ssm_conv > 1 else {"ssm": hs[:, -1]}
+    else:
+        x, z, xc, b_ssm, c_ssm, dt, a, new_conv = _mamba_core(
+            p, cfg, xz, conv_state=state["conv"], ssm_state=state["ssm"])
+        da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)          # (B,1,di,N)
+        dbx = (dt.astype(jnp.float32)[..., None]
+               * b_ssm.astype(jnp.float32)[:, :, None, :]
+               * xc.astype(jnp.float32)[..., None])
+        h = da[:, 0] * state["ssm"] + dbx[:, 0]                      # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0].astype(jnp.float32))[:, None]
+        y = y + xc.astype(jnp.float32) * p["d_skip"]
+        new_state = {"conv": new_conv, "ssm": h}
+    y = (y.astype(cd) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd))
+    return lc(out, "batch", "seq", None), new_state
+
+
+def mamba_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    di = cfg.ssm_expand * cfg.d_model
+    st = {"ssm": (batch, di, cfg.ssm_state)}
+    if cfg.ssm_conv > 1:
+        st["conv"] = (batch, cfg.ssm_conv - 1, di)
+    return st
+
+
+# ------------------------------------------------------------------ mLSTM
+def init_mlstm(cfg: ModelConfig, rng) -> dict:
+    d = cfg.d_model
+    di = cfg.xlstm_expand * d
+    h = cfg.n_heads
+    k = jax.random.split(rng, 6)
+    s = 0.02
+    return {
+        "w_up": jax.random.normal(k[0], (d, 2 * di), cfg.pdtype) * s,
+        "w_qkv": jax.random.normal(k[1], (di, 3 * di), cfg.pdtype) * s,
+        "w_if": jax.random.normal(k[2], (di, 2 * h), cfg.pdtype) * s,
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]
+                                ).astype(cfg.pdtype),
+        "w_down": jax.random.normal(k[3], (di, d), cfg.pdtype) * s,
+        "gn_scale": jnp.ones((di,), cfg.pdtype),
+    }
+
+
+def _mlstm_step(carry, inp, hd):
+    """Stabilized mLSTM recurrence (Beck et al. '24, eqs. 19-27)."""
+    c, n, m = carry                      # (B,H,hd,hd), (B,H,hd), (B,H)
+    q, k, v, log_i, log_f = inp          # (B,H,hd) x3, (B,H), (B,H)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)[..., None]
+    f_g = jnp.exp(log_f + m - m_new)[..., None]
+    c = f_g[..., None] * c + i_g[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_g * n + i_g * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q))[..., None],
+                        jnp.exp(-m_new)[..., None])
+    h = jnp.einsum("bhij,bhj->bhi", c, q) / denom
+    return (c, n, m_new), h
+
+
+def mlstm_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                state: Optional[dict] = None):
+    cd = cfg.cdtype
+    b, s_len, d = x.shape
+    h_heads = cfg.n_heads
+    di = cfg.xlstm_expand * d
+    hd = di // h_heads
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(cd))
+    u, z = up[..., :di], up[..., di:]
+    qkv = jnp.einsum("bse,ef->bsf", u, p["w_qkv"].astype(cd))
+    q, k, v = jnp.split(qkv.astype(jnp.float32), 3, axis=-1)
+    q = q.reshape(b, s_len, h_heads, hd).swapaxes(1, 2) / jnp.sqrt(hd)
+    k = k.reshape(b, s_len, h_heads, hd).swapaxes(1, 2) / jnp.sqrt(hd)
+    v = v.reshape(b, s_len, h_heads, hd).swapaxes(1, 2)
+    gates = (jnp.einsum("bse,eg->bsg", u, p["w_if"].astype(cd))
+             + p["b_if"].astype(cd)).astype(jnp.float32)
+    log_i, f_pre = gates[..., :h_heads], gates[..., h_heads:]
+    log_f = -jax.nn.softplus(-f_pre)                 # log sigmoid
+    if state is None:
+        c0 = jnp.zeros((b, h_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h_heads, hd), jnp.float32)
+        m0 = jnp.full((b, h_heads), -1e30, jnp.float32)
+        # scan over time axis: reorder to (S, B, H, hd)
+        seq = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+               v.transpose(2, 0, 1, 3),
+               log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2))
+        (c, n, m), hs = jax.lax.scan(
+            lambda cr, i: _mlstm_step(cr, i, hd), (c0, n0, m0), seq)
+        h_seq = hs.transpose(1, 0, 2, 3)             # (B,S,H,hd)
+    else:
+        seq = (q[:, :, 0], k[:, :, 0], v[:, :, 0], log_i[:, 0], log_f[:, 0])
+        (c, n, m), h_one = _mlstm_step((state["c"], state["n"], state["m"]),
+                                       seq, hd)
+        h_seq = h_one[:, None]                        # (B,1,H,hd)
+    new_state = {"c": c, "n": n, "m": m}
+    h_flat = h_seq.reshape(b, -1, di).astype(cd)
+    # group-norm-ish stabilization then gate
+    h_flat = h_flat * jax.lax.rsqrt(
+        jnp.mean(h_flat.astype(jnp.float32) ** 2, -1, keepdims=True) + 1e-6
+    ).astype(cd) * p["gn_scale"].astype(cd)
+    out = jnp.einsum("bse,ed->bsd", h_flat * jax.nn.silu(z),
+                     p["w_down"].astype(cd))
+    return lc(out, "batch", "seq", None), new_state
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    di = cfg.xlstm_expand * cfg.d_model
+    hd = di // cfg.n_heads
+    return {"c": (batch, cfg.n_heads, hd, hd),
+            "n": (batch, cfg.n_heads, hd),
+            "m": (batch, cfg.n_heads)}
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm(cfg: ModelConfig, rng) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    k = jax.random.split(rng, 4)
+    s = 0.02
+    return {
+        "w_x": jax.random.normal(k[0], (d, 4 * d), cfg.pdtype) * s,
+        "r_h": jax.random.normal(k[1], (h, hd, 4 * hd), cfg.pdtype) * s,
+        "b": jnp.zeros((4 * d,), cfg.pdtype),
+        "w_up": jax.random.normal(k[2], (d, 2 * cfg.xlstm_expand * d),
+                                  cfg.pdtype) * s,
+        "w_down": jax.random.normal(k[3], (cfg.xlstm_expand * d, d),
+                                    cfg.pdtype) * s,
+    }
+
+
+def _slstm_step(p, cfg, carry, x_t):
+    """Stabilized sLSTM cell with per-head recurrent mixing."""
+    h_prev, c_prev, n_prev, m_prev = carry           # (B,H,hd) x3, (B,H,hd)
+    b, hh, hd = h_prev.shape
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r_h"].astype(jnp.float32))
+    gates = (x_t.reshape(b, hh, 4 * hd).astype(jnp.float32) + rec)
+    zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    log_f = -jax.nn.softplus(-fi)
+    m_new = jnp.maximum(log_f + m_prev, ii)
+    i_g = jnp.exp(ii - m_new)
+    f_g = jnp.exp(log_f + m_prev - m_new)
+    c = f_g * c_prev + i_g * z
+    n = f_g * n_prev + i_g
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (h, c, n, m_new)
+
+
+def slstm_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                state: Optional[dict] = None):
+    cd = cfg.cdtype
+    b, s_len, d = x.shape
+    hh = cfg.n_heads
+    hd = d // hh
+    xg = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cd)) + p["b"].astype(cd)
+    if state is None:
+        h0 = jnp.zeros((b, hh, hd), jnp.float32)
+        c0 = jnp.zeros((b, hh, hd), jnp.float32)
+        n0 = jnp.ones((b, hh, hd), jnp.float32)
+        m0 = jnp.full((b, hh, hd), -1e30, jnp.float32)
+        def step(carry, xt):
+            new = _slstm_step(p, cfg, carry, xt)
+            return new, new[0]
+        (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                        xg.transpose(1, 0, 2))
+        h_seq = hs.transpose(1, 0, 2, 3).reshape(b, s_len, d)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+        h, c, n, m = _slstm_step(p, cfg, carry, xg[:, 0])
+        h_seq = h.reshape(b, 1, d)
+    new_state = {"h": h, "c": c, "n": n, "m": m}
+    up = jnp.einsum("bsd,de->bse", h_seq.astype(cd), p["w_up"].astype(cd))
+    di = cfg.xlstm_expand * d
+    u, z = up[..., :di], up[..., di:]
+    out = jnp.einsum("bse,ed->bsd", u * jax.nn.silu(z), p["w_down"].astype(cd))
+    return lc(out, "batch", "seq", None), new_state
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    hd = cfg.d_model // cfg.n_heads
+    sh = (batch, cfg.n_heads, hd)
+    return {"h": sh, "c": sh, "n": sh, "m": sh}

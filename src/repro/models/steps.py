@@ -1,0 +1,87 @@
+"""Training / serving step factories used by the launcher, dry-run, smoke
+tests and benchmarks.  Everything is a pure function of (params, state,
+batch) so pjit shardings apply cleanly.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_update
+from .config import ModelConfig
+from .model import Model
+
+
+def make_loss_fn(model: Model) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits = model.forward(params, batch)           # (B,S,V)
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = (logz - gold) * mask
+        # small z-loss stabilizes big-vocab training
+        zloss = 1e-4 * jnp.square(logz) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        return (nll.sum() + zloss.sum()) / denom
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    accum_steps: int = 1) -> Callable:
+    """Train step with optional gradient accumulation: the global batch is
+    split into ``accum_steps`` microbatches scanned sequentially, so peak
+    activation memory scales with the microbatch (DESIGN.md §4)."""
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                l_acc, g_acc = acc
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (l_acc + l, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, batch):
+        logits, cache = model.decode_step(params, cache, batch)
+        next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok, logits, cache
+
+    return decode_step

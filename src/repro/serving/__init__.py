@@ -1,0 +1,4 @@
+from .engine import EngineConfig, ServingEngine
+from .kv_manager import KVBlockManager
+
+__all__ = ["EngineConfig", "ServingEngine", "KVBlockManager"]

@@ -1,0 +1,168 @@
+"""Serving engine: continuous batching + RAC semantic cache front-end.
+
+Request path (the paper's semantic-cache setting, §2):
+  1. embed the query (synthetic embedding space offline; a real deployment
+     plugs a sentence encoder into ``embed_fn``);
+  2. semantic lookup against resident entries — Top-1 cosine ≥ tau_hit is a
+     hit (kernels/ops.sim_top1 is the device path) → return cached response,
+     zero model compute;
+  3. miss → schedule for generation under continuous batching; on
+     completion, admit (query-embedding, response) into the cache, evicting
+     by RAC Value when full (core/rac.py drives the decision).
+
+The KV-prefix instantiation rides underneath via
+:class:`repro.serving.kv_manager.KVBlockManager` for multi-turn requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rac import RACPolicy
+from repro.core.store import ResidentStore
+from repro.core.types import Request
+from repro.models import Model, build_model, make_decode_step
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    cache_capacity: int = 512
+    tau_hit: float = 0.85
+    max_new_tokens: int = 16
+    max_batch: int = 8            # continuous-batching slot count
+    max_seq: int = 256
+    emb_dim: int = 64
+
+
+@dataclasses.dataclass
+class RequestState:
+    rid: int
+    cid: int
+    emb: np.ndarray
+    tokens: list
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    cached: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, model_cfg: ModelConfig, ecfg: EngineConfig,
+                 params=None, rng=None, policy_kwargs: Optional[dict] = None):
+        self.cfg = ecfg
+        self.model = build_model(model_cfg)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else self.model.init(rng)
+        self.decode = jax.jit(make_decode_step(self.model))
+        # semantic cache (RAC-managed)
+        self.store = ResidentStore(ecfg.cache_capacity, ecfg.emb_dim)
+        self.policy = RACPolicy(ecfg.cache_capacity, self.store,
+                                **(policy_kwargs or {}))
+        self.responses: dict[int, list] = {}      # cid -> cached response
+        self.t = 0
+        self.stats = {"hits": 0, "misses": 0, "generated_tokens": 0,
+                      "batches": 0}
+
+    # -- cache front-end ----------------------------------------------
+    def _lookup(self, emb: np.ndarray) -> int:
+        cid, sim = self.store.nearest(emb)
+        return cid if sim >= self.cfg.tau_hit else -1
+
+    def _admit(self, req: RequestState):
+        self.responses[req.cid] = list(req.out_tokens)
+        if req.cid not in self.store:
+            self.store.insert(req.cid, req.emb)
+            self.policy.on_admit(req.cid,
+                                 Request(t=self.t, cid=req.cid, emb=req.emb),
+                                 self.t)
+            while len(self.store) > self.cfg.cache_capacity:
+                victim = self.policy.victim(self.t)
+                self.store.remove(victim)
+                self.responses.pop(victim, None)
+
+    # -- continuous batching -------------------------------------------
+    def run(self, requests: list[tuple[int, np.ndarray, list]]) -> list[RequestState]:
+        """Process requests: (cid, embedding, prompt_tokens).  Returns the
+        completed RequestState list (cache hits answer immediately)."""
+        ecfg = self.cfg
+        pending = [RequestState(rid=i, cid=c, emb=e, tokens=list(tk),
+                                t_submit=time.perf_counter())
+                   for i, (c, e, tk) in enumerate(requests)]
+        done: list[RequestState] = []
+        slots: list[Optional[RequestState]] = [None] * ecfg.max_batch
+
+        cache = self.model.init_cache(ecfg.max_batch, ecfg.max_seq)
+        pos = np.zeros(ecfg.max_batch, np.int32)
+        cur = np.zeros(ecfg.max_batch, np.int32)
+        budget = np.zeros(ecfg.max_batch, np.int32)
+        queue = list(pending)
+
+        def try_fill():
+            while queue:
+                req = queue[0]
+                if not hasattr(req, "_missed"):
+                    # lookup exactly once per request arrival
+                    self.t += 1
+                    hit = self._lookup(req.emb)
+                    if hit >= 0:
+                        queue.pop(0)
+                        self.policy.on_hit(
+                            hit, Request(t=self.t, cid=hit, emb=req.emb),
+                            self.t)
+                        req.out_tokens = list(self.responses.get(hit, []))
+                        req.done = True
+                        req.cached = True
+                        req.t_done = time.perf_counter()
+                        self.stats["hits"] += 1
+                        done.append(req)
+                        continue
+                    req._missed = True
+                    self.stats["misses"] += 1
+                free = [i for i, s in enumerate(slots) if s is None]
+                if not free:
+                    return
+                i = free[0]
+                queue.pop(0)
+                slots[i] = req
+                # (prefill folded into decode slots for simplicity: prompt
+                # tokens are fed one per step — fine at smoke scale)
+                req._feed = list(req.tokens)
+                pos[i] = 0
+                cur[i] = req._feed.pop(0)
+                budget[i] = ecfg.max_new_tokens
+
+        try_fill()
+        while any(s is not None for s in slots):
+            batch = {"tokens": jnp.asarray(cur[:, None]),
+                     "pos": jnp.asarray(pos)}
+            nxt, _, cache = self.decode(self.params, cache, batch)
+            nxt = np.asarray(nxt)
+            self.stats["batches"] += 1
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                pos[i] += 1
+                if s._feed:                      # still consuming the prompt
+                    cur[i] = s._feed.pop(0)
+                    continue
+                tok = int(nxt[i])
+                s.out_tokens.append(tok)
+                self.stats["generated_tokens"] += 1
+                budget[i] -= 1
+                if budget[i] <= 0 or pos[i] >= ecfg.max_seq - 1:
+                    s.done = True
+                    s.t_done = time.perf_counter()
+                    self._admit(s)
+                    done.append(s)
+                    slots[i] = None
+                else:
+                    cur[i] = tok
+            try_fill()
+        return sorted(done, key=lambda r: r.rid)

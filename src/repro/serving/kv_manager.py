@@ -1,0 +1,166 @@
+"""RAC-scored paged KV-block manager (the paper's KV-cache instantiation).
+
+Prefix blocks form a radix tree (SGLang-style): a cached prefix of tokens
+maps to a chain of fixed-size blocks; a new request reuses the longest
+cached prefix ("compositional content equivalence", paper §2).  Eviction
+under block pressure uses RAC's Value = TP(topic)·TSI(block):
+
+  - each *root* block routes to a topic by its prefix embedding; child
+    blocks inherit the topic (a conversation = a topic episode);
+  - the radix parent edge IS the dependency link — dep(parent) accumulates
+    child hit mass exactly as Alg. 3 does via DetectParent;
+  - structural validity (SGLang: children must be evicted before parents)
+    is preserved by masking blocks with live children out of the victim
+    scan — RAC's TSI already biases the same way (Theorem 1), the mask
+    makes it a hard constraint.
+
+Host-side data structure (like production engines); the device-side scoring
+path is kernels/ops.rac_value over the block table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Block:
+    bid: int
+    parent: int                  # -1 for root
+    tokens: tuple                # the token slice this block covers
+    topic: int = -1
+    freq: float = 0.0
+    dep: float = 0.0
+    last_t: int = -1
+    children: set = dataclasses.field(default_factory=set)
+
+    @property
+    def tsi(self) -> float:
+        return self.freq + self.dep
+
+
+class KVBlockManager:
+    def __init__(self, n_blocks: int, block_tokens: int = 16, *,
+                 alpha: float = 0.001, lam: float = 2.0):
+        self.n_blocks = n_blocks
+        self.block_tokens = block_tokens
+        self.alpha = alpha
+        self.lam = lam
+        self.blocks: dict[int, Block] = {}
+        self.root_index: dict[tuple, int] = {}     # token-slice -> root bid
+        self.child_index: dict[tuple[int, tuple], int] = {}
+        self.free: list[int] = list(range(n_blocks - 1, -1, -1))
+        # topic TP state (persistent, Alg. 2 Data)
+        self.tp_last: dict[int, float] = {}
+        self.t_last: dict[int, int] = {}
+        self.t = 0
+
+    # -- topic handling (one conversation root = one topic) ---------------
+    def _refresh_tp(self, topic: int):
+        tp = self.tp_last.get(topic, 0.0)
+        tl = self.t_last.get(topic, self.t)
+        self.tp_last[topic] = 0.5 ** (self.alpha * (self.t - tl)) * tp + 1.0
+        self.t_last[topic] = self.t
+
+    def tp_now(self, topic: int) -> float:
+        tp = self.tp_last.get(topic, 0.0)
+        tl = self.t_last.get(topic, self.t)
+        return 0.5 ** (self.alpha * (self.t - tl)) * tp
+
+    # -- prefix match / insert --------------------------------------------
+    def match_prefix(self, tokens: list[int]) -> tuple[list[int], int]:
+        """Longest cached block-chain prefix.  Returns (bids, n_tokens)."""
+        bids: list[int] = []
+        pos = 0
+        parent = -1
+        while pos + self.block_tokens <= len(tokens):
+            key = tuple(tokens[pos:pos + self.block_tokens])
+            bid = (self.root_index.get(key) if parent < 0
+                   else self.child_index.get((parent, key)))
+            if bid is None:
+                break
+            bids.append(bid)
+            parent = bid
+            pos += self.block_tokens
+        return bids, pos
+
+    def on_request(self, tokens: list[int], topic: int | None = None) -> dict:
+        """Serve one request's prefix: hit blocks get Alg.3 updates; missing
+        blocks are allocated (evicting by Value when full)."""
+        self.t += 1
+        bids, pos = self.match_prefix(tokens)
+        hit_tokens = pos
+        # topic: from the matched root or a fresh label per new conversation
+        if bids:
+            tpc = self.blocks[bids[0]].topic
+        else:
+            tpc = topic if topic is not None else (max(
+                self.tp_last.keys(), default=-1) + 1)
+        self._refresh_tp(tpc)
+        for bid in bids:                      # hits: freq + dep cascade
+            b = self.blocks[bid]
+            b.freq += 1
+            b.last_t = self.t
+            if b.parent >= 0 and b.parent in self.blocks:
+                self.blocks[b.parent].dep += 1
+        parent = bids[-1] if bids else -1
+        new_bids = []
+        while pos + self.block_tokens <= len(tokens):
+            key = tuple(tokens[pos:pos + self.block_tokens])
+            bid = self._alloc(parent, key, tpc)
+            if bid < 0:
+                break                          # no evictable block
+            new_bids.append(bid)
+            parent = bid
+            pos += self.block_tokens
+        return {"hit_blocks": bids, "new_blocks": new_bids,
+                "hit_tokens": hit_tokens, "topic": tpc}
+
+    def _alloc(self, parent: int, key: tuple, topic: int) -> int:
+        if not self.free:
+            victim = self._find_victim(exclude=parent)
+            if victim < 0:
+                return -1
+            self._evict(victim)
+        bid = self.free.pop()
+        b = Block(bid=bid, parent=parent, tokens=key, topic=topic,
+                  freq=1.0, last_t=self.t)
+        self.blocks[bid] = b
+        if parent < 0:
+            self.root_index[key] = bid
+        else:
+            self.child_index[(parent, key)] = bid
+            p = self.blocks.get(parent)
+            if p is not None:
+                p.children.add(bid)
+                p.dep += 1.0                  # new link: Alg.3 new=1 path
+        return bid
+
+    def _find_victim(self, exclude: int = -1) -> int:
+        """argmin TP(topic)·TSI over leaf blocks (children-first order).
+        ``exclude`` protects the chain tip currently being extended."""
+        best, best_v = -1, None
+        for bid, b in self.blocks.items():
+            if b.children or bid == exclude:
+                continue                      # structural validity (radix)
+            v = (self.tp_now(b.topic) * (b.freq + self.lam * b.dep),
+                 b.last_t, bid)
+            if best_v is None or v < best_v:
+                best, best_v = bid, v
+        return best
+
+    def _evict(self, bid: int):
+        b = self.blocks.pop(bid)
+        if b.parent >= 0:
+            self.child_index.pop((b.parent, b.tokens), None)
+            p = self.blocks.get(b.parent)
+            if p is not None:
+                p.children.discard(bid)
+        else:
+            self.root_index.pop(b.tokens, None)
+        self.free.append(bid)
+
+    @property
+    def used(self) -> int:
+        return len(self.blocks)

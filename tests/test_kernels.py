@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps, asserting allclose against the pure-jnp
+oracles in kernels/ref.py (Pallas executed in interpret mode on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("q_n,c_n,d", [(1, 1, 32), (7, 100, 64),
+                                       (37, 901, 64), (128, 512, 128),
+                                       (130, 1500, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sim_top1(rng, q_n, c_n, d, dtype):
+    q = jnp.asarray(rng.standard_normal((q_n, d)), dtype)
+    c = jnp.asarray(rng.standard_normal((c_n, d)), dtype)
+    v1, i1 = ops.sim_top1(q, c)
+    v2, i2 = ref.sim_top1_ref(q.astype(jnp.float32), c.astype(jnp.float32),
+                              c_n)
+    np.testing.assert_allclose(v1, v2, atol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-4)
+    # indices must agree except where scores tie within tolerance
+    diff = np.asarray(i1) != np.asarray(i2)
+    if diff.any():
+        np.testing.assert_allclose(np.asarray(v1)[diff], np.asarray(v2)[diff],
+                                   atol=2e-2)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 128),
+                                         (2, 4, 2, 200, 128),
+                                         (1, 8, 2, 300, 128),
+                                         (2, 2, 2, 513, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(rng, b, h, hkv, s, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    o1 = ops.flash_attention(q, k, v)
+    o2 = ref.attention_ref(q, k, v)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 128, 128),
+                                         (2, 4, 2, 1024, 128),
+                                         (2, 8, 2, 768, 128),
+                                         (3, 4, 4, 257, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(rng, b, h, hkv, s, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    pos = jnp.asarray(rng.integers(0, s, size=b), jnp.int32)
+    o1 = ops.decode_attention(q, k, v, pos)
+    o2 = ref.decode_attention_ref(q, k, v, pos)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("n,t", [(1, 1), (777, 33), (1024, 4), (2049, 100)])
+def test_rac_value(rng, n, t):
+    tsi = jnp.asarray(rng.random(n), jnp.float32)
+    tid = jnp.asarray(rng.integers(0, t, n), jnp.int32)
+    tp = jnp.asarray(rng.random(t) * 10, jnp.float32)
+    tl = jnp.asarray(rng.integers(0, 1000, t), jnp.int32)
+    r1 = ops.rac_value(tsi, tid, tp, tl, 0.001, 1500)
+    r2 = ref.rac_value_ref(tsi, tid, tp, tl, 0.001, 1500)
+    np.testing.assert_allclose(r1, r2, atol=1e-5)
+
+
+def test_rac_value_matches_policy_scoring(rng):
+    """Device-side Eq.1 kernel agrees with the host policy's value_scores
+    (paper mode, no normalization)."""
+    from repro.core import EmbeddingSpace, Request
+    from repro.core.rac import RACPolicy
+    from repro.core.store import ResidentStore
+
+    store = ResidentStore(32, 16)
+    pol = RACPolicy(32, store, value_mode="paper", tau_route=0.3)
+    space = EmbeddingSpace(dim=16, seed=0)
+    for t in range(40):
+        cid = int(rng.integers(0, 24))
+        emb = space.content_embedding(cid % 3, cid).astype(np.float32)
+        req = Request(t=t, cid=cid, emb=emb)
+        if cid in store:
+            pol.on_hit(cid, req, t)
+        else:
+            store.insert(cid, emb)
+            pol.on_admit(cid, req, t)
+            while len(store) > 32:
+                store.remove(pol.victim(t))
+    t_now = 50
+    cids, host_vals = pol.value_scores(t_now)
+    slots = np.array([store.slot_of[int(c)] for c in cids])
+    tids = pol.topic_of[slots]
+    dev_vals = ops.rac_value(
+        jnp.asarray(pol.tsi[slots], jnp.float32),
+        jnp.asarray(tids, jnp.int32),
+        jnp.asarray(pol.tp_last[:pol._next_tid + 1], jnp.float32),
+        jnp.asarray(pol.t_last[:pol._next_tid + 1], jnp.int32),
+        pol.alpha, t_now)
+    np.testing.assert_allclose(np.asarray(dev_vals), host_vals, rtol=1e-5)

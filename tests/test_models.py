@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (reduced same-family configs) + decode/
+forward parity (KV-cache correctness) + one train step (finite loss/grads).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (build_model, make_train_step, smoke_variant)
+from repro.optim import AdamWConfig, adamw_init
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16):
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(2, cfg.vocab_size, (b, s)),
+        jnp.int32)}
+    if cfg.frontend == "audio":
+        batch["audio_embeds"] = 0.1 * jnp.ones(
+            (b, cfg.n_frontend_tokens, cfg.d_model), cfg.cdtype)
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = 0.1 * jnp.ones(
+            (b, cfg.n_frontend_tokens, cfg.d_model), cfg.cdtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = _batch(cfg)
+    logits = model.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_finite(arch):
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = _batch(cfg)
+    batch["labels"] = batch["tokens"]
+    step = make_train_step(model, AdamWConfig(lr=1e-3))
+    params2, opt2, metrics = step(params, adamw_init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, params2)
+    assert max(jax.tree.leaves(d)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Teacher-forcing parity: decoding token-by-token through the cache
+    must reproduce the full-sequence forward logits (validates every cache
+    layout: linear KV, MLA compressed, ring window, SSM/xLSTM states)."""
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(RNG)
+    b, s = 2, 12
+    batch = _batch(cfg, b, s)
+    if cfg.family == "vlm":
+        # stand in the token embeddings as "image" embeds so the decode
+        # stream (tokens only) is information-identical to the forward
+        from repro.models.model import embed
+        batch["image_embeds"] = embed(params["emb"], cfg,
+                                      batch["tokens"][:, :cfg.n_frontend_tokens])
+    full = model.forward(params, batch)      # (B,S,V)
+
+    cache = model.init_cache(b, s + 4)
+    errs = []
+    for pos in range(s):
+        dbatch = {"tokens": batch["tokens"][:, pos:pos + 1],
+                  "pos": jnp.full((b,), pos, jnp.int32)}
+        if cfg.frontend == "audio":
+            # decode consumes the cached encoder output
+            enc = model._encode(params, batch["audio_embeds"])
+            dbatch["enc_out"] = enc
+        logits, cache = model.decode_step(params, cache, dbatch)
+        errs.append(float(jnp.abs(
+            logits - full[:, pos]).max()))
+    tail = errs
+    assert max(tail) < (2e-1 if cfg.family in ("ssm", "hybrid") else 5e-2), \
+        f"decode/forward divergence {max(tail)} (per-pos {tail})"
+
+
+def test_moe_routing_conserves_tokens():
+    """Capacity-factor dispatch: with ample capacity every token's top-k
+    mass is preserved (combine weights sum to 1 per token)."""
+    from repro.models.layers import init_moe, moe_apply
+    cfg = dataclasses.replace(
+        smoke_variant(get_config("deepseek-v2-lite-16b")),
+        capacity_factor=8.0)
+    p = init_moe(cfg, RNG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          cfg.cdtype)
+    y = moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    # zero input -> zero output (router softmax over zeros is uniform but
+    # expert MLPs map 0 -> 0 without biases)
+    y0 = moe_apply(p, cfg, jnp.zeros_like(x))
+    np.testing.assert_allclose(np.asarray(y0, np.float32), 0.0, atol=1e-5)
+
+
+def test_sliding_window_masks_distant_tokens():
+    from repro.models import layers as L
+    b, h, s, d = 1, 2, 64, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    out_w = L.sdpa(q, k, v, causal=True, window=8)
+    # perturb a token far outside every later query's window
+    k2 = k.at[:, 0].add(10.0)
+    v2 = v.at[:, 0].add(10.0)
+    out_w2 = L.sdpa(q, k2, v2, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(out_w[:, 16:]),
+                               np.asarray(out_w2[:, 16:]), atol=1e-5)
+
+
+def test_scan_equals_unrolled_stack():
+    cfg = smoke_variant(get_config("gemma-7b"))
+    cfg_scan = dataclasses.replace(cfg, scan_layers=True)
+    model_u = build_model(cfg)
+    model_s = build_model(cfg_scan)
+    params_u = model_u.init(RNG)
+    # restack the unrolled params for the scanned model
+    import jax.tree_util as jtu
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params_u["blocks"])
+    params_s = {"emb": params_u["emb"], "blocks": stacked}
+    batch = _batch(cfg)
+    lu = model_u.forward(params_u, batch)
+    ls = model_s.forward(params_s, batch)
+    np.testing.assert_allclose(np.asarray(lu, np.float32),
+                               np.asarray(ls, np.float32), atol=2e-4)

@@ -1,0 +1,116 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BASELINES, Request, Trace, hr_full, run_policy
+from repro.core.policies import BeladyPolicy
+from repro.core.rac import RACPolicy
+from repro.core.store import ResidentStore
+from repro.core.structural import pagerank_reversed
+
+POLICY_NAMES = sorted(BASELINES.keys())
+
+
+def _trace(cids, dim=8):
+    reqs = []
+    for t, c in enumerate(cids):
+        e = np.zeros(dim, np.float32)
+        e[c % dim] = 1.0
+        reqs.append(Request(t=t, cid=int(c), emb=e))
+    return Trace(requests=reqs).with_next_use()
+
+
+@given(cids=st.lists(st.integers(0, 30), min_size=1, max_size=200),
+       cap=st.integers(1, 12),
+       name=st.sampled_from(POLICY_NAMES))
+@settings(max_examples=60, deadline=None)
+def test_capacity_never_exceeded_and_counts_consistent(cids, cap, name):
+    tr = _trace(cids)
+    s = run_policy(tr, cap, lambda c, st_: BASELINES[name](c, st_), name=name)
+    assert s.hits + s.misses == len(cids)
+    assert s.evictions <= s.misses
+    assert 0.0 <= s.hit_ratio <= 1.0
+
+
+@given(cids=st.lists(st.integers(0, 20), min_size=5, max_size=150))
+@settings(max_examples=30, deadline=None)
+def test_belady_hits_monotone_in_capacity(cids):
+    tr = _trace(cids)
+    prev = -1
+    for cap in (1, 2, 4, 8, 16):
+        s = run_policy(tr, cap, lambda c, st_: BeladyPolicy(c, st_))
+        assert s.hits >= prev
+        prev = s.hits
+
+
+@given(cids=st.lists(st.integers(0, 20), min_size=5, max_size=150))
+@settings(max_examples=30, deadline=None)
+def test_infinite_cache_reaches_hr_full(cids):
+    tr = _trace(cids)
+    s = run_policy(tr, len(cids) + 1, lambda c, st_: BASELINES["LRU"](c, st_))
+    assert s.hit_ratio == hr_full(tr)
+    assert s.evictions == 0
+
+
+@given(cids=st.lists(st.integers(0, 25), min_size=1, max_size=150),
+       cap=st.integers(1, 10),
+       mode=st.sampled_from(["normalized", "paper"]))
+@settings(max_examples=40, deadline=None)
+def test_rac_invariants(cids, cap, mode):
+    """RAC-specific: capacity, topic-member consistency, value finiteness."""
+    tr = _trace(cids, dim=16)
+    store = ResidentStore(cap, 16)
+    pol = RACPolicy(cap, store, value_mode=mode, tau_route=0.3)
+    for req in tr.requests:
+        if req.cid in store:
+            pol.on_hit(req.cid, req, req.t)
+        else:
+            store.insert(req.cid, req.emb)
+            pol.on_admit(req.cid, req, req.t)
+            while len(store) > cap:
+                v = pol.victim(req.t)
+                store.remove(v)
+    assert len(store) <= cap
+    # every resident belongs to exactly one live topic's member set
+    members = [c for ts in pol.topics.values() for c in ts.members]
+    assert sorted(members) == sorted(store.keys())
+    if len(store):
+        cids_, vals = pol.value_scores(tr.requests[-1].t + 1)
+        assert np.isfinite(vals).all()
+        assert (vals >= 0).all()
+
+
+@given(n=st.integers(2, 12), beta=st.floats(0.05, 0.95),
+       data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_pagerank_is_distribution_and_anchor_dominates_chain(n, beta, data):
+    edges = [(i, i + 1) for i in range(n - 1)]   # chain: 0 is the root anchor
+    r = pagerank_reversed(edges, n, beta=beta)
+    assert abs(r.sum() - 1.0) < 1e-6
+    assert (r >= 0).all()
+    assert r[0] == r.max()       # root of the reversed chain accumulates
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_synthetic_trace_deterministic(seed):
+    from repro.core import SynthConfig, synthetic_trace
+    cfg = SynthConfig(trace_len=300, n_topics=10, seed=seed)
+    a = synthetic_trace(cfg)
+    b = synthetic_trace(cfg)
+    assert [r.cid for r in a.requests] == [r.cid for r in b.requests]
+    assert all(np.array_equal(x.emb, y.emb)
+               for x, y in zip(a.requests[:50], b.requests[:50]))
+
+
+@given(seed=st.integers(0, 1000), cursor=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_data_pipeline_cursor_determinism(seed, cursor):
+    from repro.data import DataConfig, TokenPipeline
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, seed=seed)
+    p1 = TokenPipeline(cfg)
+    p2 = TokenPipeline(cfg)
+    b1 = p1.batch_at(cursor)
+    b2 = p2.batch_at(cursor)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])

@@ -1,0 +1,225 @@
+"""RAC policy unit tests: Def.1/Def.2 faithfulness, Alg.1-5 behavior,
+Example 1 (anchors survive topic switches), PageRank appendix."""
+import numpy as np
+import pytest
+
+from repro.core import EmbeddingSpace, Request, pagerank_reversed
+from repro.core.policies import LRUPolicy
+from repro.core.rac import RACPolicy
+from repro.core.store import ResidentStore
+
+
+def _req(t, cid, emb):
+    return Request(t=t, cid=cid, emb=emb)
+
+
+def _mk(capacity=6, dim=16, **kw):
+    store = ResidentStore(capacity, dim)
+    pol = RACPolicy(capacity, store, **kw)
+    return store, pol
+
+
+def _arrive(store, pol, cid, emb, t, capacity):
+    if cid in store:
+        pol.on_hit(cid, _req(t, cid, emb), t)
+        return True
+    store.insert(cid, emb)
+    pol.on_admit(cid, _req(t, cid, emb), t)
+    while len(store) > capacity:
+        store.remove(pol.victim(t))
+    return False
+
+
+# ---------------------------------------------------------------- TP (Def.1)
+def test_tp_lazy_closed_form_matches_direct_sum(rng):
+    """TP_t(s) = Σ_{i∈H_t(s)} 0.5^{α(t-i)} — the O(1) lazy update must
+    equal the direct definition at every step."""
+    alpha = 0.02
+    store, pol = _mk(capacity=50, alpha=alpha, tau_route=0.3)
+    space = EmbeddingSpace(dim=16, seed=1)
+    hit_times = []
+    t = 0
+    for k in range(60):
+        t += int(rng.integers(1, 9))
+        emb = space.paraphrase(space.content_embedding(0, 0), 0, 0, k)
+        _arrive(store, pol, 0, emb.astype(np.float32), t, 50)
+        hit_times.append(t)
+        # single topic 0 throughout
+        assert len(pol.topics) == 1
+        tid = next(iter(pol.topics))
+        direct = sum(0.5 ** (alpha * (t - i)) for i in hit_times)
+        assert pol.tp_now(tid, t) == pytest.approx(direct, rel=1e-9)
+
+
+def test_new_topic_created_beyond_gate():
+    store, pol = _mk(capacity=10, tau_route=0.65)
+    space = EmbeddingSpace(dim=16, seed=2)
+    e0 = space.content_embedding(0, 0).astype(np.float32)
+    e1 = space.content_embedding(1, 1).astype(np.float32)  # other topic
+    _arrive(store, pol, 0, e0, 1, 10)
+    _arrive(store, pol, 1, e1, 2, 10)
+    assert pol._next_tid == 2     # cross-topic sim ≈ 0 -> two topics
+
+
+def test_same_topic_routes_together():
+    store, pol = _mk(capacity=10, dim=32, tau_route=0.65)
+    space = EmbeddingSpace(dim=32, seed=3)
+    for i in range(5):
+        e = space.content_embedding(7, 100 + i,
+                                    parent_content=100 if i else -1)
+        _arrive(store, pol, 100 + i, e.astype(np.float32), i + 1, 10)
+    assert pol._next_tid == 1
+    tid = next(iter(pol.topics))
+    assert len(pol.topics[tid].members) == 5
+
+
+# -------------------------------------------------------------- TSI (Def.2)
+def test_tsi_update_cascade_alg3():
+    """Hand-checked Alg.3: child accesses propagate dep to the parent."""
+    store, pol = _mk(capacity=10, dim=32, tau_route=0.3, tau_edge=0.5,
+                     lam=1.0, lookback=10)
+    space = EmbeddingSpace(dim=32, seed=4)
+    root = space.content_embedding(0, 0).astype(np.float32)
+    child = space.content_embedding(0, 1, parent_content=0).astype(np.float32)
+    _arrive(store, pol, 0, root, 1, 10)       # freq(0)=1
+    _arrive(store, pol, 1, child, 2, 10)      # freq(1)=1; parent detect -> 0
+    s0 = store.slot_of[0]
+    s1 = store.slot_of[1]
+    assert pol.par[1] == 0
+    # new link: dep(parent) += freq(child) = 1
+    assert pol.dep[s0] == 1.0
+    assert pol.tsi[s0] == pytest.approx(pol.freq[s0] + pol.lam * 1.0)
+    # re-access child: cached parent, dep(parent) += 1
+    _arrive(store, pol, 1, child, 3, 10)
+    assert pol.dep[s0] == 2.0
+    assert pol.freq[s1] == 2.0
+
+
+def test_lifetime_metadata_survives_eviction():
+    """Def.2: freq counts hits 'so far' — ghost metadata restores on
+    re-admission."""
+    store, pol = _mk(capacity=2, tau_route=0.3)
+    space = EmbeddingSpace(dim=16, seed=5)
+    e = {i: space.content_embedding(i, i).astype(np.float32) for i in range(4)}
+    for t, cid in enumerate([0, 0, 0]):            # freq(0) = 3
+        _arrive(store, pol, cid, e[cid], t + 1, 2)
+    pol._forget(0)                                  # force the eviction path
+    store.remove(0)
+    assert pol.g_freq[0] == 3.0
+    _arrive(store, pol, 0, e[0], 10, 2)
+    s0 = store.slot_of[0]
+    assert pol.freq[s0] == 4.0    # restored 3 + this access
+
+
+# ------------------------------------------------------------ Example 1
+def test_example1_rac_keeps_anchors_lru_does_not():
+    """Paper Example 1: alternate two topics with anchor reuse; under a
+    tight cache RAC retains the context anchors across switches and scores
+    hits where LRU gets none."""
+    space = EmbeddingSpace(dim=32, seed=6)
+    cap = 6
+
+    def session(topic, anchor, leaves, occ):
+        out = [(anchor, space.paraphrase(
+            space.content_embedding(topic, anchor), topic, anchor, occ))]
+        for leaf in leaves:
+            out.append((leaf, space.content_embedding(topic, leaf,
+                                                      parent_content=anchor)))
+        return out
+
+    # a0..a5 | b0..b5 | a0,a1*..a5* | b0,b1*..b5*  (anchors recur)
+    stream = []
+    stream += session(0, 0, [1, 2, 3, 4, 5], 0)
+    stream += session(1, 10, [11, 12, 13, 14, 15], 0)
+    stream += session(0, 0, [21, 22, 23, 24, 25], 1)
+    stream += session(1, 10, [31, 32, 33, 34, 35], 1)
+
+    def run(policy_cls, **kw):
+        store = ResidentStore(cap, 32)
+        pol = policy_cls(cap, store, **kw)
+        hits = 0
+        for t, (cid, emb) in enumerate(stream):
+            hits += _arrive(store, pol, cid, emb.astype(np.float32),
+                            t + 1, cap)
+        return hits
+
+    lru_hits = run(LRUPolicy)
+    rac_hits = run(RACPolicy, tau_route=0.5, tau_edge=0.5, alpha=0.01,
+                   lam=2.0)
+    assert lru_hits == 0          # every reuse is beyond LRU's horizon
+    assert rac_hits >= 2          # both anchor re-asks hit under RAC
+
+
+# ------------------------------------------------------------- eviction
+def test_eviction_prefers_low_value_topic():
+    # Eq.1-literal ordering (the normalized default would bounce the
+    # fresh topic-A leaf instead — covered by the Example 1 test)
+    store, pol = _mk(capacity=4, dim=32, tau_route=0.5, alpha=0.05,
+                     value_mode="paper")
+    space = EmbeddingSpace(dim=32, seed=7)
+    # topic A hit many times (hot), topic B once (cold)
+    ea = {i: space.content_embedding(0, i, parent_content=0 if i else -1)
+          for i in range(3)}
+    eb = space.content_embedding(1, 100)
+    t = 0
+    for rep in range(3):
+        for i in range(3):
+            t += 1
+            _arrive(store, pol, i, ea[i].astype(np.float32), t, 4)
+    t += 1
+    _arrive(store, pol, 100, eb.astype(np.float32), t, 4)
+    # force one eviction: the cold B entry must go before hot A members
+    t += 1
+    enew = space.content_embedding(0, 50, parent_content=0)
+    _arrive(store, pol, 50, enew.astype(np.float32), t, 4)
+    assert 100 not in store
+    assert 0 in store
+
+
+def test_victim_determinism():
+    for _ in range(2):
+        store, pol = _mk(capacity=3, tau_route=0.5)
+        space = EmbeddingSpace(dim=16, seed=8)
+        order = []
+        for t, cid in enumerate([0, 1, 2, 3, 4, 5]):
+            emb = space.content_embedding(cid % 2, cid).astype(np.float32)
+            was_hit = _arrive(store, pol, cid, emb, t + 1, 3)
+            order.append(sorted(store.keys()))
+        if _ == 0:
+            first = order
+        else:
+            assert order == first
+
+
+# ------------------------------------------------------------- pagerank
+def test_pagerank_matches_linear_solve(rng):
+    n = 7
+    edges = [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (0, 5), (5, 6)]
+    beta = 0.85
+    r = pagerank_reversed(edges, n, beta=beta)
+    assert r.sum() == pytest.approx(1.0, abs=1e-8)
+    # solve the stationary equation directly: r = (1-b)/n + b (P^T r + dang)
+    out_deg = np.zeros(n)
+    for (u, v) in edges:
+        out_deg[v] += 1
+    P = np.zeros((n, n))          # P[u,v] = 1/outdeg(v) for reversed v->u
+    for (u, v) in edges:
+        P[u, v] = 1.0 / out_deg[v]
+    dang = (out_deg == 0).astype(float)
+    A = np.eye(n) - beta * (P + np.outer(np.full(n, 1.0 / n), dang))
+    b = np.full(n, (1 - beta) / n)
+    r_direct = np.linalg.solve(A, b)
+    np.testing.assert_allclose(r, r_direct, atol=1e-8)
+    # anchors (0) must rank highest: most downstream mass
+    assert r[0] == r.max()
+
+
+def test_rac_pagerank_mode_runs():
+    store, pol = _mk(capacity=8, dim=32, structural_mode="pagerank",
+                     pagerank_every=1, tau_route=0.5)
+    space = EmbeddingSpace(dim=32, seed=9)
+    for t, cid in enumerate(range(12)):
+        emb = space.content_embedding(0, cid,
+                                      parent_content=0 if cid else -1)
+        _arrive(store, pol, cid, emb.astype(np.float32), t + 1, 8)
+    assert len(store) <= 8

@@ -1,0 +1,81 @@
+"""Serving integration: engine cache behavior + RAC-scored KV-block
+manager (radix validity, prefix reuse, eviction under pressure)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import EmbeddingSpace
+from repro.models import smoke_variant
+from repro.serving import EngineConfig, KVBlockManager, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    mcfg = smoke_variant(get_config("paper"))
+    ecfg = EngineConfig(cache_capacity=16, max_new_tokens=4, max_batch=4,
+                        max_seq=64)
+    return ServingEngine(mcfg, ecfg)
+
+
+def test_repeat_request_hits_and_matches(engine):
+    space = EmbeddingSpace(dim=64, seed=11)
+    e = space.content_embedding(0, 0).astype(np.float32)
+    p = space.paraphrase(e, 0, 0, 1).astype(np.float32)
+    prompt = [5, 6, 7]
+    done1 = engine.run([(0, e, prompt)])
+    assert not done1[0].cached
+    out1 = done1[0].out_tokens
+    done2 = engine.run([(0, p, prompt)])      # paraphrase of the same query
+    assert done2[0].cached
+    assert done2[0].out_tokens == out1        # served from cache verbatim
+    assert engine.stats["hits"] == 1
+
+
+def test_engine_batches_multiple_misses(engine):
+    space = EmbeddingSpace(dim=64, seed=12)
+    reqs = [(100 + i, space.content_embedding(3, 100 + i).astype(np.float32),
+             [2, 3, 4]) for i in range(6)]
+    done = engine.run(reqs)
+    assert len(done) == 6
+    assert all(len(r.out_tokens) == 4 for r in done)
+
+
+# ------------------------------------------------------------ KV blocks
+def test_kv_prefix_reuse():
+    mgr = KVBlockManager(n_blocks=64, block_tokens=4)
+    conv = list(range(20))
+    r1 = mgr.on_request(conv)
+    assert r1["hit_tokens"] == 0
+    assert len(r1["new_blocks"]) == 5
+    # same conversation extended: full prefix reuse
+    r2 = mgr.on_request(conv + [99, 98, 97, 96])
+    assert r2["hit_tokens"] == 20
+    assert len(r2["new_blocks"]) == 1
+
+
+def test_kv_eviction_respects_radix_validity():
+    mgr = KVBlockManager(n_blocks=8, block_tokens=4)
+    mgr.on_request(list(range(16)))           # 4 blocks, chain
+    mgr.on_request(list(range(100, 116)))     # 4 more -> full
+    mgr.on_request(list(range(200, 216)))     # needs evictions
+    # invariant: no block with live children was evicted
+    for bid, b in mgr.blocks.items():
+        for ch in b.children:
+            assert ch in mgr.blocks
+        if b.parent >= 0 and b.parent not in mgr.blocks:
+            pytest.fail(f"orphan block {bid}: parent evicted first")
+
+
+def test_kv_hot_prefix_survives():
+    mgr = KVBlockManager(n_blocks=8, block_tokens=4)
+    hot = list(range(8))                      # 2 blocks, reused often
+    for _ in range(5):
+        mgr.on_request(hot)
+    root_key = tuple(hot[:4])
+    hot_root = mgr.root_index[root_key]
+    # flood with one-off conversations to force evictions
+    for i in range(10):
+        mgr.on_request(list(range(1000 + 16 * i, 1000 + 16 * i + 12)))
+    assert mgr.root_index.get(root_key) == hot_root   # anchor retained
+    r = mgr.on_request(hot)
+    assert r["hit_tokens"] == 8

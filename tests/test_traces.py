@@ -1,0 +1,77 @@
+"""Workload generator properties (paper §4.2 axes respond to their knobs)."""
+import numpy as np
+
+from repro.core import (OASSTConfig, SynthConfig, measured_long_reuse_ratio,
+                        oasst_style_trace, synthetic_trace)
+
+
+def test_long_reuse_knob_monotone():
+    ratios = []
+    for lr in (0.3, 0.6, 0.9):
+        cfg = SynthConfig(trace_len=4000, seed=3, long_reuse_ratio=lr,
+                          capacity_ref=400)
+        tr = synthetic_trace(cfg)
+        ratios.append(measured_long_reuse_ratio(tr, 400))
+    assert ratios[0] < ratios[1] < ratios[2]
+
+
+def test_zipf_gamma_concentrates_topics():
+    def head_share(gamma):
+        tr = synthetic_trace(SynthConfig(trace_len=4000, seed=4,
+                                         zipf_gamma=gamma))
+        counts = {}
+        for r in tr.requests:
+            counts[r.topic] = counts.get(r.topic, 0) + 1
+        top = sorted(counts.values(), reverse=True)
+        return sum(top[:10]) / sum(top)
+    assert head_share(1.2) > head_share(0.4)
+
+
+def test_topic_cores_recur_across_sessions():
+    tr = synthetic_trace(SynthConfig(trace_len=4000, seed=5))
+    by_cid_sessions = {}
+    for r in tr.requests:
+        by_cid_sessions.setdefault(r.cid, set()).add(r.session)
+    multi = sum(1 for s in by_cid_sessions.values() if len(s) >= 3)
+    assert multi > 50          # topic cores exist and recur
+
+
+def test_episodes_never_interleave():
+    tr = synthetic_trace(SynthConfig(trace_len=2000, seed=6))
+    seen_done = set()
+    cur = None
+    for r in tr.requests:
+        if r.session != cur:
+            assert r.session not in seen_done, "session interleaved"
+            if cur is not None:
+                seen_done.add(cur)
+            cur = r.session
+
+
+def test_oasst_style_timestamps_and_structure():
+    tr = oasst_style_trace(OASSTConfig(trace_len=3000, seed=7))
+    ts = [r.timestamp for r in tr.requests]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))      # chronological
+    assert len(tr.requests) == 3000
+    # conversations interleave (unlike synthetic episodes)
+    switches = sum(1 for a, b in zip(tr.requests, tr.requests[1:])
+                   if a.session != b.session)
+    assert switches > 500
+    # repeats exist (popular prompts recur across users)
+    cids = [r.cid for r in tr.requests]
+    assert len(set(cids)) < len(cids)
+
+
+def test_semantic_hits_match_content_hits():
+    """The embedding geometry keeps semantic (cosine) and content (cid)
+    hit determination in agreement (paper: identical hit semantics)."""
+    from repro.core import run_policy
+    from repro.core.policies import LRUPolicy
+    tr = synthetic_trace(SynthConfig(trace_len=1500, seed=8))
+    cap = 200
+    s_content = run_policy(tr, cap, lambda c, st: LRUPolicy(c, st),
+                           hit_mode="content")
+    s_sem = run_policy(tr, cap, lambda c, st: LRUPolicy(c, st),
+                       hit_mode="semantic", tau_hit=0.85)
+    # identical up to rare borderline-similarity flips
+    assert abs(s_content.hits - s_sem.hits) <= 0.02 * len(tr.requests)
