@@ -1,0 +1,85 @@
+"""Micro-benchmark: single vs. batched lookup throughput through the
+unified ``SemanticCache`` facade at store sizes {256, 4096, 65536}.
+
+The batched path amortizes one backend dispatch (one masked matmul on the
+numpy backend; one ``sim_top1`` kernel launch on the kernel backend) over
+the whole query block — the hot-path win the facade exists for.
+
+    PYTHONPATH=src python -m benchmarks.cache_api_bench
+    PYTHONPATH=src python -m benchmarks.cache_api_bench --backend kernel
+    PYTHONPATH=src python -m benchmarks.cache_api_bench --backend kernel --no-pallas
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.cache import CacheConfig, SemanticCache
+
+from .common import emit, save_json
+
+STORE_SIZES = [256, 4096, 65536]
+N_QUERIES = 1024
+DIM = 64
+
+
+def _unit(rng, n):
+    x = rng.standard_normal((n, DIM)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def build_cache(n: int, backend: str, use_pallas: bool) -> SemanticCache:
+    cache = SemanticCache(CacheConfig(capacity=n, dim=DIM, backend=backend,
+                                      policy="LRU", use_pallas=use_pallas))
+    rng = np.random.default_rng(7)
+    embs = _unit(rng, n)
+    for i in range(n):
+        cache.admit(i, embs[i])
+    return cache
+
+
+def bench(n: int, backend: str, use_pallas: bool, repeats: int = 3) -> dict:
+    cache = build_cache(n, backend, use_pallas)
+    rng = np.random.default_rng(13)
+    queries = _unit(rng, N_QUERIES)
+    cache.peek_batch(queries[:8])                     # warm up (jit etc.)
+    cache.lookup(queries[0])
+
+    def timed(fn):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_single = timed(lambda: [cache.lookup(q) for q in queries])
+    t_batch = timed(lambda: cache.lookup_batch(queries))
+    row = {"store": n, "backend": backend, "pallas": use_pallas,
+           "single_qps": N_QUERIES / t_single,
+           "batched_qps": N_QUERIES / t_batch,
+           "speedup": t_single / t_batch}
+    emit(f"cache_lookup/store={n}/single", 1e6 * t_single / N_QUERIES,
+         f"qps={row['single_qps']:.0f}")
+    emit(f"cache_lookup/store={n}/batched", 1e6 * t_batch / N_QUERIES,
+         f"qps={row['batched_qps']:.0f},speedup={row['speedup']:.1f}x")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "kernel"])
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="kernel backend via the jnp oracle (fast on CPU)")
+    ap.add_argument("--sizes", type=int, nargs="*", default=STORE_SIZES)
+    args = ap.parse_args(argv)
+    rows = [bench(n, args.backend, not args.no_pallas) for n in args.sizes]
+    save_json(f"cache_api_bench_{args.backend}.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

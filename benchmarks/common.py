@@ -1,4 +1,9 @@
-"""Shared benchmark plumbing: policy sets, timed runs, CSV/JSON output."""
+"""Shared benchmark plumbing: policy sets, timed runs, CSV/JSON output.
+
+All runs route through the unified ``repro.cache.SemanticCache`` facade
+(via ``run_policy`` / ``run_policy_batched``); ``backend=`` selects the
+numpy slab scan or the device ``sim_top1`` kernel path.
+"""
 from __future__ import annotations
 
 import json
@@ -8,7 +13,8 @@ import time
 import numpy as np
 
 from repro.core import (OASSTConfig, SynthConfig, default_factories,
-                        oasst_style_trace, run_policy, synthetic_trace)
+                        oasst_style_trace, run_policy, run_policy_batched,
+                        synthetic_trace)
 
 OUT_DIR = os.environ.get("BENCH_OUT", "bench_results")
 N_SEEDS = int(os.environ.get("BENCH_SEEDS", "3"))
@@ -22,10 +28,18 @@ def factories(include_belady=True):
     return default_factories(include_belady=include_belady)
 
 
-def run_setting(trace, capacity, facs, hit_mode="content"):
+def run_setting(trace, capacity, facs, hit_mode="content",
+                backend="numpy", batched=False, chunk=512,
+                use_pallas=True):
     out = {}
     for name, f in facs.items():
-        s = run_policy(trace, capacity, f, name=name, hit_mode=hit_mode)
+        if batched and hit_mode == "semantic":
+            s = run_policy_batched(trace, capacity, f, name=name,
+                                   hit_mode=hit_mode, backend=backend,
+                                   chunk=chunk, use_pallas=use_pallas)
+        else:
+            s = run_policy(trace, capacity, f, name=name, hit_mode=hit_mode,
+                           backend=backend, use_pallas=use_pallas)
         out[name] = s
     return out
 

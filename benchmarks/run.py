@@ -11,9 +11,9 @@ from __future__ import annotations
 
 import sys
 
-from . import (faithfulness, fig1_example, fig2_stress, fig3_real,
-               fig4_ablation, fig5_sensitivity, kernel_bench, overhead,
-               roofline)
+from . import (cache_api_bench, faithfulness, fig1_example, fig2_stress,
+               fig3_real, fig4_ablation, fig5_sensitivity, kernel_bench,
+               overhead, roofline)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -25,6 +25,7 @@ SUITES = {
     "overhead": overhead.main,     # per-request policy latency
     "kernels": kernel_bench.main,  # Pallas kernel micro-bench
     "roofline": roofline.main,     # dry-run roofline table
+    "cache_api": lambda: cache_api_bench.main([]),  # facade lookup throughput
 }
 
 

@@ -24,6 +24,11 @@ engine = ServingEngine(mcfg, EngineConfig(cache_capacity=CAPACITY,
                                           max_new_tokens=8, max_batch=8,
                                           max_seq=96))
 
+# the engine's cache is the unified repro.cache.SemanticCache — observe
+# evictions through the event hook surface instead of poking internals
+evicted = []
+engine.cache.subscribe("evict", lambda ev: evicted.append(ev.cid))
+
 # multi-turn sessions with recurring topic anchors (the paper's workload)
 trace = synthetic_trace(SynthConfig(trace_len=N_REQUESTS, n_topics=24,
                                     seed=1))
@@ -44,6 +49,10 @@ print(f"  generated {s['generated_tokens']} tokens in {s['batches']} "
 saved = s["hits"] * 8
 print(f"  generation saved by the cache ≈ {saved} tokens "
       f"({saved / max(1, saved + s['generated_tokens']):.1%})")
+m = engine.cache.metrics
+print(f"  cache: {m.evictions} evictions ({len(evicted)} seen by hook), "
+      f"lookup {1e3 * m.lookup_s:.1f} ms total / "
+      f"{1e6 * m.lookup_s / max(1, m.lookups):.0f} us per op")
 
 # --- KV prefix-block reuse under RAC scoring --------------------------
 print("\n[kv-prefix] RAC-scored radix block manager:")

@@ -1,0 +1,51 @@
+"""Unified semantic-cache subsystem: one batched, backend-pluggable API.
+
+:class:`SemanticCache` owns hit determination, admission, and eviction
+end-to-end; the trace simulator, the serving engine, the examples, and the
+benchmarks all sit behind it.  Lookups dispatch through a pluggable
+:class:`LookupBackend` — :class:`NumpyBackend` scans the host slab,
+:class:`KernelBackend` batches Top-1 retrieval through the
+``kernels/ops.sim_top1`` Pallas kernel and scores evictions with
+``kernels/ops.rac_value`` on device — with identical hit decisions.
+
+Usage::
+
+    import numpy as np
+    from repro.cache import CacheConfig, SemanticCache
+
+    cache = SemanticCache(CacheConfig(capacity=512, dim=64, tau_hit=0.85,
+                                      backend="numpy", policy="RAC"))
+    cache.subscribe("evict", lambda ev: print("evicted", ev.cid))
+
+    q = np.random.default_rng(0).standard_normal(64).astype(np.float32)
+    q /= np.linalg.norm(q)
+
+    r = cache.lookup(q, cid=7)             # CacheHit | CacheMiss
+    if not r.hit:
+        cache.admit(7, q, payload=["the", "response"])
+    assert cache.lookup(q, cid=7).payload == ["the", "response"]
+
+    # hot path: score a whole queue in ONE backend call
+    queries = np.stack([q] * 32)
+    results = cache.lookup_batch(queries, cids=list(range(32)))
+
+    state = cache.checkpoint()             # deep snapshot...
+    cache.restore(state)                   # ...restored exactly
+
+    print(cache.metrics.snapshot())        # hits/misses/evictions/latency
+
+Policy selection follows the simulator: ``policy="RAC"`` (or any name in
+``repro.core.policies.BASELINES``) plus ``policy_kwargs``, or pass a
+``policy_factory=(capacity, store) -> Policy`` for sweep drivers.
+"""
+from .backends import (KernelBackend, LookupBackend, NumpyBackend,
+                       get_backend)
+from .facade import SemanticCache
+from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
+                    CacheMiss, CacheResult)
+
+__all__ = [
+    "SemanticCache", "CacheConfig", "CacheHit", "CacheMiss", "CacheResult",
+    "CacheEvent", "CacheMetrics", "LookupBackend", "NumpyBackend",
+    "KernelBackend", "get_backend",
+]

@@ -1,0 +1,153 @@
+"""Pluggable lookup/scoring backends behind :class:`repro.cache.SemanticCache`.
+
+A backend answers two questions over the resident slab
+(:class:`repro.core.store.ResidentStore`):
+
+  - Top-1 retrieval: for a (batch of) query embedding(s), which resident
+    entry is most similar, and how similar?  (hit determination)
+  - RAC value scoring: Eq. 1 ``TP(Z_q)·TSI(q)`` over the resident table.
+    (eviction scoring)
+
+Two implementations with identical hit decisions:
+
+  - :class:`NumpyBackend` — the host path: masked matmul over the dense
+    slab (exactly ``ResidentStore.nearest`` for single queries, so the
+    refactored simulator stays bit-for-bit with the historical loop).
+  - :class:`KernelBackend` — the device path: one ``kernels/ops.sim_top1``
+    call scores the whole query batch against the full fixed-shape slab
+    (stable shapes → one XLA compilation), and ``kernels/ops.rac_value``
+    scores evictions.  Free slots hold zero embeddings: a zero row can only
+    win Top-1 when every real similarity is negative, in which case the
+    query is far below any sensible ``tau_hit`` and is reported as a miss
+    ``(-1, -inf)`` — the same *decision* the numpy path makes.
+
+Backends are stateless: they read the store that is passed in, so one
+backend instance can serve many caches and ``checkpoint()/restore()``
+needs no backend cooperation.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.store import ResidentStore
+
+
+@runtime_checkable
+class LookupBackend(Protocol):
+    """Protocol every lookup/scoring backend implements."""
+
+    name: str
+
+    def top1(self, store: ResidentStore,
+             query: np.ndarray) -> tuple[int, float]:
+        """Top-1 resident for one query -> (cid, sim) or (-1, -inf)."""
+        ...
+
+    def top1_batch(self, store: ResidentStore,
+                   queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Top-1 residents for (B, D) queries -> (cids (B,), sims (B,))."""
+        ...
+
+    def rac_value(self, tsi: np.ndarray, tids: np.ndarray,
+                  tp_last: np.ndarray, t_last: np.ndarray,
+                  alpha: float, t_now: int) -> np.ndarray:
+        """RAC Eq. 1 ``2^(-alpha·(t_now - t_last[tid])) · TP_last[tid] · tsi``."""
+        ...
+
+
+class NumpyBackend:
+    """Host-side slab scan (the historical ``ResidentStore.nearest`` path)."""
+
+    name = "numpy"
+
+    def top1(self, store: ResidentStore, query: np.ndarray) -> tuple[int, float]:
+        return store.nearest(query)
+
+    def top1_batch(self, store: ResidentStore,
+                   queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        if not store.slot_of:
+            return (np.full(b, -1, dtype=np.int64),
+                    np.full(b, -np.inf, dtype=np.float64))
+        sims = queries @ store.emb.T                      # (B, n_slots)
+        sims[:, ~store.occ] = -np.inf
+        idx = np.argmax(sims, axis=1)
+        return (store.cid[idx].copy(),
+                sims[np.arange(b), idx].astype(np.float64))
+
+    def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
+        decay = 0.5 ** (alpha * (t_now - t_last[tids]))
+        return decay * tp_last[tids] * tsi
+
+
+class KernelBackend:
+    """Device path: batched Top-1 via the ``sim_top1`` Pallas kernel and
+    eviction scoring via the ``rac_value`` kernel.
+
+    The full (capacity+1, D) slab is passed every call so XLA sees one
+    stable shape; query batches are padded up to a multiple of ``q_pad``
+    for the same reason.  ``use_pallas=False`` routes through the jnp
+    oracles (useful on CPU where interpret-mode overhead dominates).
+    """
+
+    name = "kernel"
+
+    def __init__(self, use_pallas: bool = True,
+                 interpret: bool | None = None, q_pad: int = 8):
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.q_pad = max(1, q_pad)
+
+    def top1(self, store: ResidentStore, query: np.ndarray) -> tuple[int, float]:
+        cids, sims = self.top1_batch(store, np.asarray(query)[None, :])
+        return int(cids[0]), float(sims[0])
+
+    def top1_batch(self, store: ResidentStore,
+                   queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        from repro.kernels import ops                  # deferred: jax import
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        if not store.slot_of:
+            return (np.full(b, -1, dtype=np.int64),
+                    np.full(b, -np.inf, dtype=np.float64))
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        vals, idx = ops.sim_top1(qp, store.emb, use_pallas=self.use_pallas,
+                                 interpret=self.interpret)
+        vals = np.asarray(vals[:b], dtype=np.float64)
+        idx = np.asarray(idx[:b])
+        cids = store.cid[idx].copy()
+        # a free (zeroed) slot can only win when all real sims < 0 → miss
+        sims = np.where(cids >= 0, vals, -np.inf)
+        return cids, sims
+
+    def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
+        from repro.kernels import ops
+        # shift timestamps so t_now is the static constant 0: the kernel
+        # sees 0 - (t_last - t_now) = t_now - t_last, and jit never
+        # recompiles as simulation time advances.
+        out = ops.rac_value(np.asarray(tsi, dtype=np.float32),
+                            np.asarray(tids, dtype=np.int32),
+                            np.asarray(tp_last, dtype=np.float32),
+                            np.asarray(t_last - t_now, dtype=np.int32),
+                            float(alpha), 0, use_pallas=self.use_pallas,
+                            interpret=self.interpret)
+        return np.asarray(out, dtype=np.float64)
+
+
+_BACKENDS = {"numpy": NumpyBackend, "kernel": KernelBackend}
+
+
+def get_backend(name: str, **kwargs) -> LookupBackend:
+    """Instantiate a backend by config name (``"numpy"`` | ``"kernel"``)."""
+    if isinstance(name, (NumpyBackend, KernelBackend)):
+        return name
+    try:
+        cls = _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown cache backend {name!r}; "
+                         f"expected one of {sorted(_BACKENDS)}") from None
+    return cls(**kwargs) if cls is KernelBackend else cls()

@@ -1,0 +1,249 @@
+"""`SemanticCache` — the single owner of lookup, admission, and eviction.
+
+Every consumer in the repo (trace simulator, serving engine, examples,
+benchmarks) drives the cache through this facade instead of wiring
+``ResidentStore`` + ``Policy`` by hand.  The protocol is the paper's
+Alg. 1 exactly:
+
+  - ``lookup`` determines a hit under identical semantics for every policy
+    (Top-1 cosine >= tau_hit in semantic mode; content-id residency in
+    content mode) and notifies the policy of hits.  Lookups never admit.
+  - ``admit`` is always-admit (Alg. 1 line 4): insert, then evict while
+    over capacity.  Policies express admission control by electing the
+    fresh entry as the victim (e.g. TinyLFU).
+  - payloads (cached responses) live here too: eviction drops the payload
+    and fires the ``"evict"`` event — no consumer hand-rolls payload
+    bookkeeping anymore.
+
+Batching: ``lookup_batch``/``admit_batch`` drain whole queues in one
+backend call (one ``sim_top1`` kernel launch under the kernel backend).
+A batched lookup scores every query against the store *snapshot* at call
+time; hits are revalidated against residency when results are applied, so
+interleaved evictions can never produce a stale hit.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.store import ResidentStore
+from repro.core.types import Request
+
+from .backends import LookupBackend, get_backend
+from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
+                    CacheMiss, CacheResult)
+
+PolicyFactory = Callable[[int, ResidentStore], Any]
+
+_MUTABLE_STATE = ("store", "policy", "payloads", "clock", "metrics")
+
+
+def _make_policy(cfg: CacheConfig, store: ResidentStore):
+    if cfg.policy == "RAC":
+        from repro.core.rac import RACPolicy
+        return RACPolicy(cfg.capacity, store, **cfg.policy_kwargs)
+    from repro.core.policies import BASELINES
+    return BASELINES[cfg.policy](cfg.capacity, store, **cfg.policy_kwargs)
+
+
+class SemanticCache:
+    """Batched, backend-pluggable semantic cache (see module docstring).
+
+    ``policy_factory`` overrides ``cfg.policy`` with the simulator's
+    ``(capacity, store) -> Policy`` calling convention, so sweep drivers
+    can inject pre-built factories unchanged.
+    """
+
+    def __init__(self, cfg: CacheConfig,
+                 policy_factory: Optional[PolicyFactory] = None,
+                 backend: Optional[LookupBackend] = None):
+        self.cfg = cfg
+        self.store = ResidentStore(cfg.capacity, cfg.dim)
+        self.policy = (policy_factory(cfg.capacity, self.store)
+                       if policy_factory is not None
+                       else _make_policy(cfg, self.store))
+        self.backend = (backend if backend is not None
+                        else get_backend(cfg.backend,
+                                         **({"use_pallas": cfg.use_pallas}
+                                            if cfg.backend == "kernel" else {})))
+        self.payloads: dict[int, Any] = {}
+        self.metrics = CacheMetrics()
+        self.clock = 0                     # internal logical time
+        self._hooks: dict[str, list[Callable[[CacheEvent], None]]] = {}
+        # device-side eviction scoring: RAC consumes the backend's
+        # rac_value if the policy exposes the hook (core/rac.py)
+        if hasattr(self.policy, "value_backend"):
+            self.policy.value_backend = self.backend.rac_value
+
+    # ----------------------------------------------------------- events
+    def subscribe(self, kind: str, fn: Callable[[CacheEvent], None]):
+        """Register ``fn`` for ``"hit" | "miss" | "admit" | "evict"``."""
+        self._hooks.setdefault(kind, []).append(fn)
+        return fn
+
+    def _emit(self, kind: str, cid: int, t: int, sim: float = float("nan"),
+              payload: Any = None):
+        hooks = self._hooks.get(kind)
+        if hooks:
+            ev = CacheEvent(kind=kind, cid=cid, t=t, sim=sim, payload=payload)
+            for fn in hooks:
+                fn(ev)
+
+    # ------------------------------------------------------------ basics
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def __contains__(self, cid: int) -> bool:
+        return cid in self.store
+
+    def _tick(self, t: Optional[int]) -> int:
+        if t is None:
+            self.clock += 1
+            return self.clock
+        self.clock = max(self.clock, t)
+        return t
+
+    def _request(self, cid: int, emb: np.ndarray, t: int,
+                 req: Optional[Request]) -> Request:
+        return req if req is not None else Request(t=t, cid=cid, emb=emb)
+
+    # ------------------------------------------------------------ lookup
+    def lookup(self, emb: np.ndarray, *, cid: int = -1,
+               t: Optional[int] = None, req: Optional[Request] = None,
+               top1: Optional[tuple[int, float]] = None) -> CacheResult:
+        """Hit determination for one query.  Never admits.
+
+        ``cid`` is the query's content id (required for content mode and
+        for consumers that track per-content payloads).  ``top1`` is an
+        optional precomputed ``(cid, sim)`` from a snapshot ``peek_batch``;
+        it is revalidated against residency and recomputed on staleness.
+        """
+        t0 = time.perf_counter()
+        t = self._tick(t)
+        if self.cfg.hit_mode == "content":
+            best_cid, best_sim = cid, float("nan")
+            hit_cid = cid if cid in self.store else -1
+        else:
+            if top1 is not None and (top1[0] < 0 or top1[0] in self.store):
+                best_cid, best_sim = top1
+            else:
+                best_cid, best_sim = self.backend.top1(self.store, emb)
+            hit_cid = best_cid if best_sim >= self.cfg.tau_hit else -1
+        self.metrics.lookups += 1
+        if hit_cid >= 0:
+            self.metrics.hits += 1
+            self.policy.on_hit(hit_cid,
+                               self._request(hit_cid, emb, t, req), t)
+            self._emit("hit", hit_cid, t, best_sim,
+                       self.payloads.get(hit_cid))
+            result: CacheResult = CacheHit(cid=hit_cid, sim=best_sim,
+                                           payload=self.payloads.get(hit_cid),
+                                           t=t)
+        else:
+            self.metrics.misses += 1
+            self._emit("miss", cid, t, best_sim)
+            result = CacheMiss(best_cid=best_cid if np.isfinite(best_sim)
+                               else -1, best_sim=best_sim, t=t)
+        self.metrics.lookup_s += time.perf_counter() - t0
+        return result
+
+    def peek_batch(self, embs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Raw snapshot Top-1 over a (B, D) query block — one backend call,
+        no policy/metrics side effects.  Sims are against the store as of
+        this call; pair with ``lookup(..., top1=...)`` to apply results."""
+        return self.backend.top1_batch(self.store, np.asarray(embs))
+
+    def lookup_batch(self, embs: Sequence[np.ndarray] | np.ndarray, *,
+                     cids: Optional[Sequence[int]] = None,
+                     ts: Optional[Sequence[int]] = None,
+                     reqs: Optional[Sequence[Request]] = None
+                     ) -> list[CacheResult]:
+        """Hit determination for a whole query block in ONE backend call.
+
+        Snapshot semantics: similarities are computed against the store at
+        call time (lookups never admit, so residency can only change via
+        subscriber-driven mutation — hits are revalidated regardless).
+        """
+        embs = np.asarray(embs, dtype=np.float32)
+        b = embs.shape[0]
+        cids = list(cids) if cids is not None else [-1] * b
+        if self.cfg.hit_mode == "content":
+            return [self.lookup(embs[i], cid=cids[i],
+                                t=None if ts is None else ts[i],
+                                req=None if reqs is None else reqs[i])
+                    for i in range(b)]
+        t0 = time.perf_counter()
+        top_cids, top_sims = self.peek_batch(embs)
+        self.metrics.lookup_s += time.perf_counter() - t0
+        return [self.lookup(embs[i], cid=cids[i],
+                            t=None if ts is None else ts[i],
+                            req=None if reqs is None else reqs[i],
+                            top1=(int(top_cids[i]), float(top_sims[i])))
+                for i in range(b)]
+
+    # ------------------------------------------------------------- admit
+    def admit(self, cid: int, emb: np.ndarray, payload: Any = None, *,
+              t: Optional[int] = None,
+              req: Optional[Request] = None) -> list[int]:
+        """Admit ``cid`` (insert-then-evict, Alg. 1).  Returns evicted cids.
+
+        Already-resident cids only refresh their payload (the historical
+        semantic-mode behavior: a miss whose content is resident — a
+        paraphrase below tau_hit — does not reinsert)."""
+        t0 = time.perf_counter()
+        t = self._tick(t)
+        if payload is not None:
+            self.payloads[cid] = payload
+        evicted: list[int] = []
+        if self.cfg.capacity <= 0 or cid in self.store:
+            self.metrics.admit_s += time.perf_counter() - t0
+            return evicted
+        self.store.insert(cid, emb)
+        self.policy.on_admit(cid, self._request(cid, emb, t, req), t)
+        self.metrics.admissions += 1
+        self._emit("admit", cid, t, payload=payload)
+        while len(self.store) > self.cfg.capacity:
+            victim = self.policy.victim(t)
+            self.store.remove(victim)
+            vp = self.payloads.pop(victim, None)
+            self.metrics.evictions += 1
+            evicted.append(victim)
+            self._emit("evict", victim, t, payload=vp)
+        self.metrics.admit_s += time.perf_counter() - t0
+        return evicted
+
+    def admit_batch(self, cids: Sequence[int],
+                    embs: Sequence[np.ndarray] | np.ndarray,
+                    payloads: Optional[Sequence[Any]] = None, *,
+                    ts: Optional[Sequence[int]] = None,
+                    reqs: Optional[Sequence[Request]] = None) -> list[int]:
+        """Admit a block of entries; returns all evicted cids in order."""
+        evicted: list[int] = []
+        for i, cid in enumerate(cids):
+            evicted += self.admit(
+                int(cid), np.asarray(embs[i]),
+                None if payloads is None else payloads[i],
+                t=None if ts is None else ts[i],
+                req=None if reqs is None else reqs[i])
+        return evicted
+
+    # ------------------------------------------------- checkpoint/restore
+    def checkpoint(self) -> dict:
+        """Deep snapshot of all mutable state (store, policy, payloads,
+        clock, metrics).  Store/policy are copied together so the policy's
+        internal store reference stays shared inside the snapshot."""
+        state = copy.deepcopy({k: getattr(self, k) for k in _MUTABLE_STATE})
+        state["_version"] = 1
+        return state
+
+    def restore(self, state: dict):
+        """Restore a :meth:`checkpoint` snapshot (the snapshot itself is
+        copied, so one checkpoint can be restored multiple times)."""
+        restored = copy.deepcopy({k: state[k] for k in _MUTABLE_STATE})
+        for k in _MUTABLE_STATE:
+            setattr(self, k, restored[k])
+        if hasattr(self.policy, "value_backend"):
+            self.policy.value_backend = self.backend.rac_value

@@ -1,0 +1,110 @@
+"""Datatypes for the unified semantic-cache facade.
+
+One configuration object (:class:`CacheConfig`), one result algebra
+(:class:`CacheHit` / :class:`CacheMiss`), one metrics block
+(:class:`CacheMetrics`), and one event record (:class:`CacheEvent`) shared
+by every consumer of :class:`repro.cache.SemanticCache` — the simulator,
+the serving engine, examples, and benchmarks all see the same protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+
+@dataclasses.dataclass
+class CacheConfig:
+    """Configuration for one :class:`~repro.cache.SemanticCache` instance.
+
+    ``hit_mode`` mirrors the simulator's two equivalent hit semantics:
+    ``"semantic"`` (Top-1 cosine >= tau_hit; the paper's semantic cache) and
+    ``"content"`` (content-id residency; O(1), used for large sweeps).
+    ``backend`` selects the lookup/scoring implementation: ``"numpy"`` (host
+    slab scan) or ``"kernel"`` (batched through ``kernels/ops.sim_top1`` and
+    ``kernels/ops.rac_value``); both produce identical hit decisions.
+    """
+
+    capacity: int
+    dim: int
+    tau_hit: float = 0.85
+    hit_mode: str = "semantic"           # "semantic" | "content"
+    backend: str = "numpy"               # "numpy" | "kernel"
+    policy: str = "RAC"                  # name in BASELINES or "RAC"
+    policy_kwargs: dict = dataclasses.field(default_factory=dict)
+    use_pallas: bool = True              # kernel backend: pallas vs jnp oracle
+
+
+@dataclasses.dataclass
+class CacheHit:
+    """Lookup resolved to a resident entry."""
+
+    cid: int                             # resident entry that served the query
+    sim: float                           # Top-1 cosine (nan in content mode)
+    payload: Any = None                  # whatever admit() stored, or None
+    t: int = -1                          # logical time of the lookup
+
+    @property
+    def hit(self) -> bool:
+        return True
+
+    def __bool__(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass
+class CacheMiss:
+    """Lookup found no resident entry above the hit threshold."""
+
+    best_cid: int = -1                   # nearest resident (may be -1: empty)
+    best_sim: float = float("-inf")      # its similarity (below tau_hit)
+    t: int = -1
+
+    @property
+    def hit(self) -> bool:
+        return False
+
+    def __bool__(self) -> bool:
+        return False
+
+
+CacheResult = Union[CacheHit, CacheMiss]
+
+
+@dataclasses.dataclass
+class CacheEvent:
+    """One observable cache transition, delivered to subscribed hooks."""
+
+    kind: str                            # "hit" | "miss" | "admit" | "evict"
+    cid: int
+    t: int
+    sim: float = float("nan")
+    payload: Any = None
+
+
+@dataclasses.dataclass
+class CacheMetrics:
+    """Counters + per-op latency accumulators (seconds)."""
+
+    hits: int = 0
+    misses: int = 0
+    admissions: int = 0
+    evictions: int = 0
+    lookups: int = 0
+    lookup_s: float = 0.0
+    admit_s: float = 0.0
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / max(1, self.requests)
+
+    def snapshot(self) -> dict:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "admissions": self.admissions, "evictions": self.evictions,
+            "lookups": self.lookups, "hit_ratio": self.hit_ratio,
+            "lookup_s": self.lookup_s, "admit_s": self.admit_s,
+        }

@@ -4,13 +4,19 @@ Public API:
     - Trace generation:  synthetic_trace, oasst_style_trace, SynthConfig,
       OASSTConfig
     - Policies:          RACPolicy (+ make_rac, RAC_VARIANTS), BASELINES
-    - Simulation:        run_policy, run_many, default_factories, hr_full
+    - Simulation:        run_policy, run_policy_batched, run_many,
+      default_factories, hr_full
     - Types:             Request, Trace, Stats
+
+The cache protocol itself (lookup / admit / evict, payloads, metrics,
+backends) lives in :mod:`repro.cache`; the simulation drivers here replay
+traces through that facade.
 """
 from .embeddings import EmbeddingSpace, cosine
 from .policies import BASELINES, Policy
 from .rac import RAC_VARIANTS, RACPolicy, make_rac
-from .simulator import default_factories, hr_full, run_many, run_policy
+from .simulator import (default_factories, hr_full, run_many, run_policy,
+                        run_policy_batched)
 from .store import ResidentStore
 from .structural import pagerank_power_jax, pagerank_reversed
 from .traces import (OASSTConfig, SynthConfig, measured_long_reuse_ratio,
@@ -19,7 +25,8 @@ from .types import Request, Stats, Trace, summarize
 
 __all__ = [
     "EmbeddingSpace", "cosine", "BASELINES", "Policy", "RACPolicy",
-    "RAC_VARIANTS", "make_rac", "run_policy", "run_many",
+    "RAC_VARIANTS", "make_rac", "run_policy", "run_policy_batched",
+    "run_many",
     "default_factories", "hr_full", "ResidentStore", "pagerank_reversed",
     "pagerank_power_jax", "SynthConfig", "OASSTConfig", "synthetic_trace",
     "oasst_style_trace", "measured_long_reuse_ratio", "Request", "Stats",

@@ -122,6 +122,10 @@ class RACPolicy(Policy):
         self.ghost_topics: dict[int, tuple[np.ndarray, float, int]] = {}
         self._evictions = 0
         self._pr_scores: dict[int, float] = {}   # cid -> pagerank structural term
+        # optional device-side Eq.1 scorer (repro.cache wires the lookup
+        # backend's rac_value here); signature
+        # (tsi, tids, tp_last, t_last, alpha, t_now) -> values
+        self.value_backend = None
 
     # ------------------------------------------------------------------ TP
     def _grow_tp(self, tid: int):
@@ -321,10 +325,6 @@ class RACPolicy(Policy):
         cids = np.fromiter(self.store.slot_of.keys(), dtype=np.int64,
                            count=len(self.store.slot_of))
         tids = self.topic_of[slots]
-        if self.use_tp:
-            tp = 0.5 ** (self.alpha * (t - self.t_last[tids])) * self.tp_last[tids]
-        else:
-            tp = np.ones(len(slots))
         if self.use_tsi:
             if self.structural_mode == "pagerank" and self._pr_scores:
                 pr = np.array([self._pr_scores.get(int(c), 0.0) for c in cids])
@@ -338,6 +338,12 @@ class RACPolicy(Policy):
             mass = np.zeros(int(tids.max()) + 1)
             np.add.at(mass, tids, tsi)
             tsi = tsi / np.maximum(mass[tids], 1e-9)
+        if not self.use_tp:
+            return cids, tsi
+        if self.value_backend is not None:
+            return cids, self.value_backend(tsi, tids, self.tp_last,
+                                            self.t_last, self.alpha, t)
+        tp = 0.5 ** (self.alpha * (t - self.t_last[tids])) * self.tp_last[tids]
         return cids, tp * tsi
 
     def victim(self, t):

@@ -1,7 +1,8 @@
 """Trace-driven cache simulator with shared hit semantics (paper §2, §4.2).
 
 All policies see the *same* request sequence under *identical* hit
-semantics.  Two equivalent hit modes:
+semantics, enforced by driving every run through the unified
+:class:`repro.cache.SemanticCache` facade.  Two equivalent hit modes:
 
   - ``content``:  hit iff the request's content id is resident (query-level
     content equivalence).  O(1), used for large sweeps.
@@ -14,11 +15,18 @@ semantics.  Two equivalent hit modes:
 Admission is always-admit (paper Alg. 1 line 4: insert, then evict while
 over capacity) — policies express admission control by electing the fresh
 entry as the victim (e.g. TinyLFU).
+
+``run_policy`` replays one request at a time (bit-for-bit the historical
+loop); ``run_policy_batched`` is the large-sweep fast path that scores a
+whole chunk of queries per backend call (one ``sim_top1`` kernel launch
+under ``backend="kernel"``), with snapshot semantics inside a chunk.
 """
 from __future__ import annotations
 
 import time
 from typing import Callable
+
+import numpy as np
 
 from .store import ResidentStore
 from .types import Stats, Trace
@@ -37,38 +45,85 @@ def hr_full(trace: Trace) -> float:
     return hits / max(1, len(trace.requests))
 
 
-def run_policy(trace: Trace, capacity: int, factory: PolicyFactory,
-               hit_mode: str = "content", tau_hit: float = 0.85,
-               name: str | None = None) -> Stats:
+def _make_cache(trace: Trace, capacity: int, factory: PolicyFactory,
+                hit_mode: str, tau_hit: float, backend: str,
+                use_pallas: bool) -> "SemanticCache":
+    # deferred: repro.cache depends on repro.core.{store,types}, and this
+    # module is imported during repro.core package init
+    from repro.cache import CacheConfig, SemanticCache
     dim = trace.requests[0].emb.shape[0]
-    store = ResidentStore(capacity, dim)
-    policy = factory(capacity, store)
-    stats = Stats(policy=name or getattr(policy, "name", factory.__name__),
-                  capacity=capacity, requests=len(trace.requests))
-    t0 = time.perf_counter()
-    for req in trace.requests:
-        if hit_mode == "content":
-            hit_cid = req.cid if req.cid in store else -1
-        else:
-            cid, sim = store.nearest(req.emb)
-            hit_cid = cid if sim >= tau_hit else -1
-        if hit_cid >= 0:
-            stats.hits += 1
-            policy.on_hit(hit_cid, req, req.t)
-        else:
-            stats.misses += 1
-            if capacity <= 0:
-                continue
-            if hit_mode == "content" or req.cid not in store:
-                store.insert(req.cid, req.emb)
-                policy.on_admit(req.cid, req, req.t)
-                while len(store) > capacity:
-                    v = policy.victim(req.t)
-                    store.remove(v)
-                    stats.evictions += 1
+    cfg = CacheConfig(capacity=capacity, dim=dim, tau_hit=tau_hit,
+                      hit_mode=hit_mode, backend=backend,
+                      use_pallas=use_pallas)
+    return SemanticCache(cfg, policy_factory=factory)
+
+
+def _finish(stats: Stats, cache: SemanticCache, trace: Trace,
+            t0: float) -> Stats:
+    m = cache.metrics
+    stats.hits, stats.misses, stats.evictions = m.hits, m.misses, m.evictions
     stats.wall_s = time.perf_counter() - t0
     stats.hr_full = hr_full(trace)
     return stats
+
+
+def run_policy(trace: Trace, capacity: int, factory: PolicyFactory,
+               hit_mode: str = "content", tau_hit: float = 0.85,
+               name: str | None = None, backend: str = "numpy",
+               use_pallas: bool = True) -> Stats:
+    """Replay ``trace`` through a :class:`SemanticCache` one request at a
+    time — the reference protocol every policy is compared under."""
+    cache = _make_cache(trace, capacity, factory, hit_mode, tau_hit,
+                        backend, use_pallas)
+    stats = Stats(policy=name or getattr(cache.policy, "name",
+                                         factory.__name__),
+                  capacity=capacity, requests=len(trace.requests))
+    t0 = time.perf_counter()
+    for req in trace.requests:
+        r = cache.lookup(req.emb, cid=req.cid, t=req.t, req=req)
+        if not r.hit:
+            cache.admit(req.cid, req.emb, t=req.t, req=req)
+    return _finish(stats, cache, trace, t0)
+
+
+def run_policy_batched(trace: Trace, capacity: int, factory: PolicyFactory,
+                       hit_mode: str = "semantic", tau_hit: float = 0.85,
+                       name: str | None = None, backend: str = "numpy",
+                       chunk: int = 512, use_pallas: bool = True) -> Stats:
+    """Large-sweep fast path: Top-1 similarities are computed one chunk at
+    a time (one backend call per chunk) against the store snapshot at
+    chunk start.
+
+    Hits are revalidated against residency before they count (an entry
+    evicted mid-chunk can never serve a stale hit; the lookup falls back
+    to an exact scan).  The remaining approximation: a query whose only
+    match is admitted *within the same chunk* scores as a miss, exactly as
+    if the whole chunk had arrived concurrently.  (Those extra admissions
+    also perturb the eviction trajectory, so per-trace hit counts are
+    close to but not bounded by the exact replay's.)  ``chunk=1``
+    degenerates to :func:`run_policy`.  Content mode needs no similarity
+    work and simply delegates.
+    """
+    if hit_mode == "content":
+        return run_policy(trace, capacity, factory, hit_mode=hit_mode,
+                          tau_hit=tau_hit, name=name, backend=backend)
+    cache = _make_cache(trace, capacity, factory, hit_mode, tau_hit,
+                        backend, use_pallas)
+    stats = Stats(policy=name or getattr(cache.policy, "name",
+                                         factory.__name__),
+                  capacity=capacity, requests=len(trace.requests))
+    t0 = time.perf_counter()
+    reqs = trace.requests
+    for lo in range(0, len(reqs), max(1, chunk)):
+        block = reqs[lo:lo + max(1, chunk)]
+        embs = np.stack([r.emb for r in block])
+        top_cids, top_sims = cache.peek_batch(embs)
+        for req, c, s in zip(block, top_cids, top_sims):
+            r = cache.lookup(req.emb, cid=req.cid, t=req.t, req=req,
+                             top1=(int(c), float(s)))
+            if not r.hit:
+                cache.admit(req.cid, req.emb, t=req.t, req=req)
+    return _finish(stats, cache, trace, t0)
 
 
 def run_many(trace: Trace, capacity: int,

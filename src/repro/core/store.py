@@ -47,6 +47,9 @@ class ResidentStore:
         slot = self.slot_of.pop(cid)
         self.occ[slot] = False
         self.cid[slot] = -1
+        # zero the freed row: device backends score the full fixed-shape
+        # slab, and a zero embedding can never clear tau_hit > 0
+        self.emb[slot] = 0.0
         self._free.append(slot)
         return slot
 

@@ -253,15 +253,30 @@ class HloCostModel:
                 return False
         return True
 
-    def _root_kind(self, op: _Op) -> str:
-        """Effective opcode: for fusions, the dominant body op (layout and
-        elementwise wrappers like bitcast/convert don't change the class)."""
-        if op.opcode != "fusion":
-            return op.opcode
-        kinds = set()
+    def _body_kinds(self, op: _Op, seen: set[str]) -> set[str]:
+        """Opcodes reachable inside an op's called computations, looking
+        through nested fusion/call wrappers (the CPU backend wraps
+        partitioned fusions in ``call`` ops)."""
+        kinds: set[str] = set()
         for cm_ in _CALL_RE.finditer(op.tail):
-            for o in self.comps.get(cm_.group(1), []):
-                kinds.add(o.opcode)
+            comp = cm_.group(1)
+            if comp in seen:
+                continue
+            seen.add(comp)
+            for o in self.comps.get(comp, []):
+                if o.opcode in ("fusion", "call"):
+                    kinds |= self._body_kinds(o, seen)
+                else:
+                    kinds.add(o.opcode)
+        return kinds
+
+    def _root_kind(self, op: _Op) -> str:
+        """Effective opcode: for fusions/calls, the dominant body op
+        (layout and elementwise wrappers like bitcast/convert don't change
+        the class)."""
+        if op.opcode not in ("fusion", "call"):
+            return op.opcode
+        kinds = self._body_kinds(op, set())
         for heavy in ("dot", "scatter", "gather", "sort", "reduce-window"):
             if heavy in kinds:
                 return heavy

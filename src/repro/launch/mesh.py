@@ -25,3 +25,23 @@ def make_local_mesh():
     """Degenerate 1-device mesh for laptop runs (same code path)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def abstract_mesh(shape, axis_names):
+    """Version-portable ``jax.sharding.AbstractMesh`` construction.
+
+    The AbstractMesh calling convention differs across jax releases: some
+    take a single tuple of ``(name, size)`` pairs (e.g. 0.4.37, tried
+    first), others take ``(shape, axis_names)`` as two positional tuples
+    (the fallback).  Every analysis
+    path (sharding-plan rules, HLO cost tests) builds device-free meshes
+    through this helper so the repo tracks either convention.
+    """
+    from jax.sharding import AbstractMesh
+    shape = tuple(int(s) for s in shape)
+    axis_names = tuple(axis_names)
+    assert len(shape) == len(axis_names)
+    try:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+    except TypeError:
+        return AbstractMesh(shape, axis_names)

@@ -3,12 +3,16 @@
 Request path (the paper's semantic-cache setting, §2):
   1. embed the query (synthetic embedding space offline; a real deployment
      plugs a sentence encoder into ``embed_fn``);
-  2. semantic lookup against resident entries — Top-1 cosine ≥ tau_hit is a
-     hit (kernels/ops.sim_top1 is the device path) → return cached response,
-     zero model compute;
+  2. semantic lookup against resident entries through the unified
+     :class:`repro.cache.SemanticCache` facade — the whole waiting queue is
+     scored in ONE ``lookup_batch`` call (one ``sim_top1`` kernel launch
+     under the ``"kernel"`` backend) and Top-1 cosine ≥ tau_hit hits return
+     their cached response with zero model compute;
   3. miss → schedule for generation under continuous batching; on
-     completion, admit (query-embedding, response) into the cache, evicting
-     by RAC Value when full (core/rac.py drives the decision).
+     completion, admit (query-embedding, response) into the cache.  The
+     facade owns eviction (RAC Value scoring) and drops the evicted
+     response payloads itself — the engine only observes via the
+     ``"evict"`` event hook.
 
 The KV-prefix instantiation rides underneath via
 :class:`repro.serving.kv_manager.KVBlockManager` for multi-turn requests.
@@ -17,15 +21,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rac import RACPolicy
-from repro.core.store import ResidentStore
-from repro.core.types import Request
+from repro.cache import CacheConfig, SemanticCache
 from repro.models import Model, build_model, make_decode_step
 from repro.models.config import ModelConfig
 
@@ -38,6 +40,7 @@ class EngineConfig:
     max_batch: int = 8            # continuous-batching slot count
     max_seq: int = 256
     emb_dim: int = 64
+    cache_backend: str = "numpy"  # "numpy" | "kernel" (device sim_top1)
 
 
 @dataclasses.dataclass
@@ -61,31 +64,43 @@ class ServingEngine:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.params = params if params is not None else self.model.init(rng)
         self.decode = jax.jit(make_decode_step(self.model))
-        # semantic cache (RAC-managed)
-        self.store = ResidentStore(ecfg.cache_capacity, ecfg.emb_dim)
-        self.policy = RACPolicy(ecfg.cache_capacity, self.store,
-                                **(policy_kwargs or {}))
-        self.responses: dict[int, list] = {}      # cid -> cached response
-        self.t = 0
-        self.stats = {"hits": 0, "misses": 0, "generated_tokens": 0,
-                      "batches": 0}
+        # semantic cache (RAC-managed) behind the unified facade
+        self.cache = SemanticCache(CacheConfig(
+            capacity=ecfg.cache_capacity, dim=ecfg.emb_dim,
+            tau_hit=ecfg.tau_hit, hit_mode="semantic",
+            backend=ecfg.cache_backend, policy="RAC",
+            policy_kwargs=policy_kwargs or {}))
+        self._gen = {"generated_tokens": 0, "batches": 0,
+                     "evicted_responses": 0}
+        self.cache.subscribe("evict", self._on_evict)
+        self._recent_admits: list[int] = []          # admits since last scan
+        self.cache.subscribe("admit",
+                             lambda ev: self._recent_admits.append(ev.cid))
 
-    # -- cache front-end ----------------------------------------------
-    def _lookup(self, emb: np.ndarray) -> int:
-        cid, sim = self.store.nearest(emb)
-        return cid if sim >= self.cfg.tau_hit else -1
+    def _on_evict(self, ev):
+        # the facade already dropped the payload with the entry; the engine
+        # only observes (metrics / future writeback)
+        if ev.payload is not None:
+            self._gen["evicted_responses"] += 1
 
-    def _admit(self, req: RequestState):
-        self.responses[req.cid] = list(req.out_tokens)
-        if req.cid not in self.store:
-            self.store.insert(req.cid, req.emb)
-            self.policy.on_admit(req.cid,
-                                 Request(t=self.t, cid=req.cid, emb=req.emb),
-                                 self.t)
-            while len(self.store) > self.cfg.cache_capacity:
-                victim = self.policy.victim(self.t)
-                self.store.remove(victim)
-                self.responses.pop(victim, None)
+    # legacy attribute surface (tests, examples, notebooks) --------------
+    @property
+    def store(self):
+        return self.cache.store
+
+    @property
+    def policy(self):
+        return self.cache.policy
+
+    @property
+    def responses(self):
+        return self.cache.payloads
+
+    @property
+    def stats(self) -> dict:
+        m = self.cache.metrics
+        return {**self._gen, "hits": m.hits, "misses": m.misses,
+                "evictions": m.evictions}
 
     # -- continuous batching -------------------------------------------
     def run(self, requests: list[tuple[int, np.ndarray, list]]) -> list[RequestState]:
@@ -104,32 +119,73 @@ class ServingEngine:
         budget = np.zeros(ecfg.max_batch, np.int32)
         queue = list(pending)
 
+        peeked: dict[int, tuple[int, float]] = {}   # rid -> best-known top-1
+        peeked_once = [False]
+        recent = self._recent_admits
+
+        def serve_hit(req: RequestState, res):
+            req.out_tokens = list(res.payload or [])
+            req.done = True
+            req.cached = True
+            req.t_done = time.perf_counter()
+            done.append(req)
+
+        def drain_hits():
+            # resolve every waiting request whose best-known similarity
+            # clears tau_hit; the definitive miss is only charged when a
+            # request is scheduled, so each request is counted exactly once
+            waiting = []
+            for req in queue:
+                c, s = peeked[req.rid]
+                if s >= ecfg.tau_hit and c in self.cache:
+                    res = self.cache.lookup(req.emb, cid=req.cid,
+                                            top1=(c, s))
+                    serve_hit(req, res)
+                else:
+                    waiting.append(req)
+            queue[:] = waiting
+
         def try_fill():
+            # batched hit determination: the full queue is scored in ONE
+            # facade call at first entry; afterwards each waiting request
+            # only scores against entries admitted since the last pass
+            # (O(queue x new-admits), not O(queue x store)), keeping its
+            # running best-known top-1 in `peeked`.  A stale best whose
+            # entry was evicted is caught by residency checks here and by
+            # lookup()'s revalidation at scheduling time.
+            if queue and not peeked_once[0]:
+                peeked_once[0] = True
+                cids, sims = self.cache.peek_batch(
+                    np.stack([r.emb for r in queue]))
+                for req, c, s in zip(queue, cids, sims):
+                    peeked[req.rid] = (int(c), float(s))
+                recent.clear()
+                drain_hits()
+            elif queue and recent:
+                rows = [self.cache.store.slot_of[c] for c in set(recent)
+                        if c in self.cache.store]
+                recent.clear()
+                if rows:
+                    live = self.cache.store.cid[rows]
+                    sims = np.stack([r.emb for r in queue]) \
+                        @ self.cache.store.emb[rows].T
+                    best = np.argmax(sims, axis=1)
+                    for row, req in enumerate(queue):
+                        s = float(sims[row, best[row]])
+                        if s > peeked[req.rid][1]:
+                            peeked[req.rid] = (int(live[best[row]]), s)
+                    drain_hits()
             while queue:
-                req = queue[0]
-                if not hasattr(req, "_missed"):
-                    # lookup exactly once per request arrival
-                    self.t += 1
-                    hit = self._lookup(req.emb)
-                    if hit >= 0:
-                        queue.pop(0)
-                        self.policy.on_hit(
-                            hit, Request(t=self.t, cid=hit, emb=req.emb),
-                            self.t)
-                        req.out_tokens = list(self.responses.get(hit, []))
-                        req.done = True
-                        req.cached = True
-                        req.t_done = time.perf_counter()
-                        self.stats["hits"] += 1
-                        done.append(req)
-                        continue
-                    req._missed = True
-                    self.stats["misses"] += 1
                 free = [i for i, s in enumerate(slots) if s is None]
                 if not free:
                     return
                 i = free[0]
-                queue.pop(0)
+                req = queue.pop(0)
+                res = self.cache.lookup(req.emb, cid=req.cid,
+                                        top1=peeked.get(req.rid))
+                if res.hit:          # store unchanged since peek: rare race
+                    serve_hit(req, res)
+                    continue
                 slots[i] = req
                 # (prefill folded into decode slots for simplicity: prompt
                 # tokens are fed one per step — fine at smoke scale)
@@ -144,7 +200,7 @@ class ServingEngine:
                      "pos": jnp.asarray(pos)}
             nxt, _, cache = self.decode(self.params, cache, batch)
             nxt = np.asarray(nxt)
-            self.stats["batches"] += 1
+            self._gen["batches"] += 1
             for i, s in enumerate(slots):
                 if s is None:
                     continue
@@ -154,12 +210,13 @@ class ServingEngine:
                     continue
                 tok = int(nxt[i])
                 s.out_tokens.append(tok)
-                self.stats["generated_tokens"] += 1
+                self._gen["generated_tokens"] += 1
                 budget[i] -= 1
                 if budget[i] <= 0 or pos[i] >= ecfg.max_seq - 1:
                     s.done = True
                     s.t_done = time.perf_counter()
-                    self._admit(s)
+                    self.cache.admit(s.cid, s.emb,
+                                     payload=list(s.out_tokens))
                     done.append(s)
                     slots[i] = None
                 else:

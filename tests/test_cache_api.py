@@ -1,0 +1,207 @@
+"""The unified SemanticCache facade: protocol parity with the historical
+simulator loop, numpy-vs-kernel backend equivalence, payload/eviction
+hooks, checkpoint/restore, and the no-inline-cache-logic guarantee for the
+serving engine."""
+import numpy as np
+import pytest
+
+from repro.cache import (CacheConfig, CacheHit, CacheMiss, KernelBackend,
+                         NumpyBackend, SemanticCache, get_backend)
+from repro.core import (EmbeddingSpace, SynthConfig, default_factories,
+                        run_policy, synthetic_trace)
+from repro.core.store import ResidentStore
+
+
+# ------------------------------------------------------------------ parity
+def _seed_loop(trace, capacity, factory, hit_mode="content", tau_hit=0.85):
+    """The pre-facade simulator protocol, verbatim — the parity oracle."""
+    dim = trace.requests[0].emb.shape[0]
+    store = ResidentStore(capacity, dim)
+    policy = factory(capacity, store)
+    hits = misses = evictions = 0
+    for req in trace.requests:
+        if hit_mode == "content":
+            hit_cid = req.cid if req.cid in store else -1
+        else:
+            cid, sim = store.nearest(req.emb)
+            hit_cid = cid if sim >= tau_hit else -1
+        if hit_cid >= 0:
+            hits += 1
+            policy.on_hit(hit_cid, req, req.t)
+        else:
+            misses += 1
+            if capacity <= 0:
+                continue
+            if hit_mode == "content" or req.cid not in store:
+                store.insert(req.cid, req.emb)
+                policy.on_admit(req.cid, req, req.t)
+                while len(store) > capacity:
+                    v = policy.victim(req.t)
+                    store.remove(v)
+                    evictions += 1
+    return hits, misses, evictions
+
+
+@pytest.fixture(scope="module")
+def trace_10k():
+    return synthetic_trace(SynthConfig(trace_len=10_000, seed=0)).with_next_use()
+
+
+@pytest.mark.parametrize("name", ["RAC", "LRU", "S3-FIFO", "Belady"])
+def test_run_policy_reproduces_seed_counts_content(trace_10k, name):
+    facs = default_factories(include_belady=True)
+    cap = int(0.1 * trace_10k.meta["unique"])
+    ref = _seed_loop(trace_10k, cap, facs[name], hit_mode="content")
+    s = run_policy(trace_10k, cap, facs[name], hit_mode="content", name=name)
+    assert (s.hits, s.misses, s.evictions) == ref
+
+
+@pytest.mark.parametrize("name", ["RAC", "LRU"])
+def test_run_policy_reproduces_seed_counts_semantic(trace_10k, name):
+    facs = default_factories(include_belady=True)
+    cap = int(0.1 * trace_10k.meta["unique"])
+    ref = _seed_loop(trace_10k, cap, facs[name], hit_mode="semantic")
+    s = run_policy(trace_10k, cap, facs[name], hit_mode="semantic",
+                   name=name)
+    assert (s.hits, s.misses, s.evictions) == ref
+
+
+# ------------------------------------------------------- backend equivalence
+def _filled_cache(backend, n=40, capacity=50, dim=64, policy="LRU"):
+    space = EmbeddingSpace(dim=dim, seed=5)
+    cache = SemanticCache(CacheConfig(capacity=capacity, dim=dim,
+                                      backend=backend, policy=policy))
+    embs = [space.content_embedding(i % 8, i).astype(np.float32)
+            for i in range(n)]
+    for i, e in enumerate(embs):
+        cache.admit(i, e, payload=[i])
+    return cache, space, embs
+
+
+def test_lookup_batch_kernel_matches_numpy():
+    cn, space, embs = _filled_cache("numpy")
+    ck, _, _ = _filled_cache("kernel")
+    queries = np.stack(
+        [space.paraphrase(embs[i], i % 8, i, 1).astype(np.float32)
+         for i in range(len(embs))]
+        + [space.content_embedding(9, 1000 + j).astype(np.float32)
+           for j in range(8)])
+    n_cids, n_sims = cn.peek_batch(queries)
+    k_cids, k_sims = ck.peek_batch(queries)
+    np.testing.assert_array_equal(n_cids, k_cids)
+    np.testing.assert_allclose(n_sims, k_sims, atol=1e-5)
+    rn = cn.lookup_batch(queries, cids=list(range(len(queries))))
+    rk = ck.lookup_batch(queries, cids=list(range(len(queries))))
+    assert [r.hit for r in rn] == [r.hit for r in rk]
+    assert [r.cid if r.hit else -1 for r in rn] == \
+           [r.cid if r.hit else -1 for r in rk]
+    assert sum(r.hit for r in rn) == len(embs)      # paraphrases all hit
+    assert cn.metrics.hits == ck.metrics.hits
+
+
+def test_lookup_batch_matches_sequential_lookups():
+    cn, space, embs = _filled_cache("numpy")
+    cs, _, _ = _filled_cache("numpy")
+    queries = np.stack(
+        [space.paraphrase(embs[i], i % 8, i, 1).astype(np.float32)
+         for i in range(10)])
+    batched = cn.lookup_batch(queries)
+    single = [cs.lookup(q) for q in queries]
+    for b, s in zip(batched, single):
+        assert b.hit == s.hit and b.cid == s.cid
+        np.testing.assert_allclose(b.sim, s.sim, atol=1e-6)
+
+
+def test_kernel_rac_value_matches_numpy():
+    rng = np.random.default_rng(0)
+    nb, kb = NumpyBackend(), KernelBackend()
+    tsi = rng.random(100)
+    tids = rng.integers(0, 16, 100)
+    tp_last = rng.random(16) * 5
+    t_last = rng.integers(0, 500, 16)
+    a = nb.rac_value(tsi, tids, tp_last, t_last, 0.001, 700)
+    b = kb.rac_value(tsi, tids, tp_last, t_last, 0.001, 700)
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_get_backend_rejects_unknown():
+    with pytest.raises(ValueError):
+        get_backend("cuda")
+
+
+# ------------------------------------------------------ facade semantics
+def test_lookup_never_admits_and_admit_evicts():
+    space = EmbeddingSpace(dim=32, seed=1)
+    cache = SemanticCache(CacheConfig(capacity=2, dim=32, policy="FIFO"))
+    e = [space.content_embedding(0, i).astype(np.float32) for i in range(3)]
+    assert isinstance(cache.lookup(e[0], cid=0), CacheMiss)
+    assert len(cache) == 0                      # miss did not admit
+    cache.admit(0, e[0], payload="r0")
+    cache.admit(1, e[1], payload="r1")
+    evicted = cache.admit(2, e[2], payload="r2")
+    assert evicted == [0] and len(cache) == 2   # FIFO over capacity 2
+    assert 0 not in cache.payloads              # payload died with entry
+    r = cache.lookup(e[1], cid=1)
+    assert isinstance(r, CacheHit) and r.payload == "r1"
+
+
+def test_event_hooks_fire():
+    space = EmbeddingSpace(dim=32, seed=2)
+    cache = SemanticCache(CacheConfig(capacity=1, dim=32, policy="LRU"))
+    seen = []
+    for kind in ("hit", "miss", "admit", "evict"):
+        cache.subscribe(kind, lambda ev, k=kind: seen.append((k, ev.cid)))
+    e0 = space.content_embedding(0, 0).astype(np.float32)
+    e1 = space.content_embedding(1, 1).astype(np.float32)
+    cache.lookup(e0, cid=0)                     # miss
+    cache.admit(0, e0, payload="x")             # admit
+    cache.lookup(e0, cid=0)                     # hit
+    cache.admit(1, e1)                          # admit + evict 0
+    kinds = [k for k, _ in seen]
+    assert kinds == ["miss", "admit", "hit", "admit", "evict"]
+    assert seen[-1] == ("evict", 0)
+    m = cache.metrics
+    assert (m.hits, m.misses, m.admissions, m.evictions) == (1, 1, 2, 1)
+
+
+def test_checkpoint_restore_roundtrip():
+    cache, space, embs = _filled_cache("numpy", n=30, capacity=32)
+    cache.lookup(embs[3], cid=3)
+    snap = cache.checkpoint()
+    before = (cache.metrics.hits, cache.metrics.evictions, len(cache.store),
+              sorted(cache.store.keys()), dict(cache.payloads))
+    for j in range(50):                          # churn everything
+        cache.admit(2000 + j,
+                    space.content_embedding(11, 2000 + j).astype(np.float32))
+    assert sorted(cache.store.keys()) != before[3]
+    cache.restore(snap)
+    after = (cache.metrics.hits, cache.metrics.evictions, len(cache.store),
+             sorted(cache.store.keys()), dict(cache.payloads))
+    assert after == before
+    # restored cache still behaves: resident entry hits again
+    assert cache.lookup(embs[3], cid=3).hit
+
+
+def test_content_mode_lookup_batch():
+    cache = SemanticCache(CacheConfig(capacity=8, dim=16, policy="LRU",
+                                      hit_mode="content"))
+    rng = np.random.default_rng(0)
+    embs = rng.standard_normal((4, 16)).astype(np.float32)
+    cache.admit_batch([0, 1], embs[:2])
+    rs = cache.lookup_batch(embs, cids=[0, 1, 2, 3])
+    assert [r.hit for r in rs] == [True, True, False, False]
+
+
+# ----------------------------------------------------------- engine facade
+def test_engine_has_no_inline_cache_logic():
+    """The acceptance criterion: ServingEngine owns no cache protocol —
+    lookup/admit/evict live behind SemanticCache only."""
+    import inspect
+
+    from repro.serving.engine import ServingEngine
+    assert not hasattr(ServingEngine, "_lookup")
+    assert not hasattr(ServingEngine, "_admit")
+    src = inspect.getsource(ServingEngine)
+    assert "ResidentStore(" not in src and "RACPolicy(" not in src
+    # batched hot path: the whole queue is scored in one facade call
+    assert "peek_batch" in src

@@ -99,7 +99,8 @@ def test_gradient_compression_error_feedback():
 
 def test_param_spec_divisibility():
     """Every spec must evenly divide its dims (else replicate)."""
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     from repro.configs import get_config
     cfg = get_config("smollm-360m")
     plan = ShardingPlan(dp=("data",), fsdp=True)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.hlo_cost import HloCostModel, analyze
+from repro.launch.mesh import abstract_mesh
 
 
 def test_dynamic_slice_counts_slice_not_operand():
@@ -47,7 +48,7 @@ def test_fused_attn_region_excludes_interior():
 def test_sharding_plan_kind_rules():
     from repro.configs import get_config
     from repro.distributed.sharding import ShardingPlan
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     gemma = get_config("gemma-7b")          # 8.5B
     qwen = get_config("qwen1.5-110b")       # 111B
     small = get_config("smollm-360m")

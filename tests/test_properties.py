@@ -1,5 +1,8 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import BASELINES, Request, Trace, hr_full, run_policy
