@@ -13,7 +13,7 @@ import sys
 
 from . import (cache_api_bench, faithfulness, fig1_example, fig2_stress,
                fig3_real, fig4_ablation, fig5_sensitivity, kernel_bench,
-               overhead, roofline)
+               overhead, roofline, sharded_lookup_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -26,6 +26,7 @@ SUITES = {
     "kernels": kernel_bench.main,  # Pallas kernel micro-bench
     "roofline": roofline.main,     # dry-run roofline table
     "cache_api": lambda: cache_api_bench.main([]),  # facade lookup throughput
+    "sharded": lambda: sharded_lookup_bench.main([]),  # multi-device lookup
 }
 
 

@@ -37,15 +37,45 @@ Usage::
 Policy selection follows the simulator: ``policy="RAC"`` (or any name in
 ``repro.core.policies.BASELINES``) plus ``policy_kwargs``, or pass a
 ``policy_factory=(capacity, store) -> Policy`` for sweep drivers.
+
+Backend topology
+----------------
+
+Three backends share one decision semantics (identical hit/admit/evict
+outcomes on the same request stream):
+
+  - ``"numpy"``   — single host: one dense ``(capacity+1, D)`` slab, masked
+    matmul Top-1.  The parity oracle everything else is tested against.
+  - ``"kernel"``  — single device: the same slab scored by the
+    ``sim_top1`` Pallas kernel up to the store's high-water mark (the
+    resident count is a scalar-prefetched runtime value, one compilation
+    per geometry), evictions via the ``rac_value`` kernel.
+  - ``"sharded"`` — multi-device: the slab is row-partitioned into
+    ``n_shards`` blocks of ``ceil((capacity+1)/n_shards)`` rows, shard
+    ``s`` owning rows ``[s·R, (s+1)·R)`` on device ``s`` of a 1-D
+    ``("cache",)`` mesh (``repro.launch.mesh.make_cache_mesh``).  Lookups
+    fan out under ``shard_map``: every device scores its own block against
+    the replicated query batch with a locally-valid slot count, the
+    per-shard ``(val, local_idx)`` pairs are all-gathered and merged into
+    global ``(cid, sim)`` by a single argmax-reduce over the shard axis.
+    Admission places new entries on the least-loaded shard; eviction
+    scoring shards the resident table's entry axis over the same mesh and
+    the policy's deterministic lexsort takes the global min.  On machines
+    with fewer devices than shards the identical per-shard math runs as a
+    loop on one device, so decisions are topology-independent.
+
+Capacity therefore scales with the mesh: each device holds and scores only
+``1/n_shards`` of the resident slab.
 """
 from .backends import (KernelBackend, LookupBackend, NumpyBackend,
                        get_backend)
 from .facade import SemanticCache
+from .sharded import ShardedKernelBackend, ShardedStore
 from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
                     CacheMiss, CacheResult)
 
 __all__ = [
     "SemanticCache", "CacheConfig", "CacheHit", "CacheMiss", "CacheResult",
     "CacheEvent", "CacheMetrics", "LookupBackend", "NumpyBackend",
-    "KernelBackend", "get_backend",
+    "KernelBackend", "ShardedKernelBackend", "ShardedStore", "get_backend",
 ]

@@ -8,22 +8,30 @@ A backend answers two questions over the resident slab
   - RAC value scoring: Eq. 1 ``TP(Z_q)·TSI(q)`` over the resident table.
     (eviction scoring)
 
-Two implementations with identical hit decisions:
+Three implementations with identical hit decisions:
 
   - :class:`NumpyBackend` — the host path: masked matmul over the dense
     slab (exactly ``ResidentStore.nearest`` for single queries, so the
     refactored simulator stays bit-for-bit with the historical loop).
   - :class:`KernelBackend` — the device path: one ``kernels/ops.sim_top1``
-    call scores the whole query batch against the full fixed-shape slab
-    (stable shapes → one XLA compilation), and ``kernels/ops.rac_value``
-    scores evictions.  Free slots hold zero embeddings: a zero row can only
-    win Top-1 when every real similarity is negative, in which case the
-    query is far below any sensible ``tau_hit`` and is reported as a miss
-    ``(-1, -inf)`` — the same *decision* the numpy path makes.
+    call scores the whole query batch against the fixed-shape slab up to
+    the store's high-water mark (the resident count is a scalar-prefetched
+    runtime value, so one XLA compilation serves every fill level), and
+    ``kernels/ops.rac_value`` scores evictions.  Free slots hold zero
+    embeddings: a zero row can only win Top-1 when every real similarity
+    is negative, in which case the query is far below any sensible
+    ``tau_hit`` and is reported as a miss ``(-1, -inf)`` — the same
+    *decision* the numpy path makes.
+  - :class:`~repro.cache.sharded.ShardedKernelBackend` (``"sharded"``) —
+    the multi-device path: the slab is row-partitioned across a 1-D cache
+    mesh and ``sim_top1`` runs per shard under ``shard_map`` with an
+    argmax-reduce merge (see ``repro/cache/sharded.py``).
 
-Backends are stateless: they read the store that is passed in, so one
-backend instance can serve many caches and ``checkpoint()/restore()``
-needs no backend cooperation.
+Backends are stateless with respect to the host store: they read the store
+that is passed in, so one backend instance can serve many caches and
+``checkpoint()/restore()`` needs no backend cooperation (the sharded
+backend's device-side slab is a cache keyed by the store's mutation
+version, rebuilt on demand).
 """
 from __future__ import annotations
 
@@ -115,7 +123,11 @@ class KernelBackend:
                     np.full(b, -np.inf, dtype=np.float64))
         pad = (-b) % self.q_pad
         qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
-        vals, idx = ops.sim_top1(qp, store.emb, use_pallas=self.use_pallas,
+        # runtime n_valid = the store's high-water mark: slots past it have
+        # never been occupied, so the kernel skips scoring the free tail
+        # (one compilation — the count is scalar-prefetched, not baked in)
+        vals, idx = ops.sim_top1(qp, store.emb, n_valid=store.hwm,
+                                 use_pallas=self.use_pallas,
                                  interpret=self.interpret)
         vals = np.asarray(vals[:b], dtype=np.float64)
         idx = np.asarray(idx[:b])
@@ -138,16 +150,35 @@ class KernelBackend:
         return np.asarray(out, dtype=np.float64)
 
 
-_BACKENDS = {"numpy": NumpyBackend, "kernel": KernelBackend}
+def _backends() -> dict:
+    # deferred: repro.cache.sharded pulls in jax-facing modules lazily, but
+    # keep even its import off the module path of numpy-only consumers
+    from .sharded import ShardedKernelBackend
+    return {"numpy": NumpyBackend, "kernel": KernelBackend,
+            "sharded": ShardedKernelBackend}
 
 
 def get_backend(name: str, **kwargs) -> LookupBackend:
-    """Instantiate a backend by config name (``"numpy"`` | ``"kernel"``)."""
-    if isinstance(name, (NumpyBackend, KernelBackend)):
+    """Instantiate a backend by config name
+    (``"numpy"`` | ``"kernel"`` | ``"sharded"``).
+
+    ``kwargs`` are forwarded to the backend constructor *uniformly*;
+    unexpected ones raise (a ``TypeError`` from the constructor), they are
+    never silently dropped.  An already-built backend instance passes
+    through unchanged — constructor kwargs cannot apply to it, so passing
+    any alongside an instance raises ``ValueError``."""
+    if not isinstance(name, str):
+        if not isinstance(name, LookupBackend):
+            raise ValueError(f"expected a backend name or LookupBackend "
+                             f"instance, got {name!r}")
+        if kwargs:
+            raise ValueError(f"backend instance {name!r} cannot take "
+                             f"constructor kwargs {sorted(kwargs)}")
         return name
+    registry = _backends()
     try:
-        cls = _BACKENDS[name]
+        cls = registry[name]
     except KeyError:
         raise ValueError(f"unknown cache backend {name!r}; "
-                         f"expected one of {sorted(_BACKENDS)}") from None
-    return cls(**kwargs) if cls is KernelBackend else cls()
+                         f"expected one of {sorted(registry)}") from None
+    return cls(**kwargs)

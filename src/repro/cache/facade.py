@@ -61,14 +61,26 @@ class SemanticCache:
                  policy_factory: Optional[PolicyFactory] = None,
                  backend: Optional[LookupBackend] = None):
         self.cfg = cfg
-        self.store = ResidentStore(cfg.capacity, cfg.dim)
+        if backend is not None:
+            if cfg.backend_kwargs:
+                raise ValueError(
+                    "backend_kwargs "
+                    f"{sorted(cfg.backend_kwargs)} cannot apply to an "
+                    "already-built backend instance")
+            self.backend = backend
+        else:
+            kw = dict(cfg.backend_kwargs)
+            if cfg.backend in ("kernel", "sharded"):
+                kw.setdefault("use_pallas", cfg.use_pallas)
+            self.backend = get_backend(cfg.backend, **kw)
+        # backends that own their store geometry (e.g. the sharded slab)
+        # build it; everyone else gets the plain dense slab
+        self.store = (self.backend.make_store(cfg.capacity, cfg.dim)
+                      if hasattr(self.backend, "make_store")
+                      else ResidentStore(cfg.capacity, cfg.dim))
         self.policy = (policy_factory(cfg.capacity, self.store)
                        if policy_factory is not None
                        else _make_policy(cfg, self.store))
-        self.backend = (backend if backend is not None
-                        else get_backend(cfg.backend,
-                                         **({"use_pallas": cfg.use_pallas}
-                                            if cfg.backend == "kernel" else {})))
         self.payloads: dict[int, Any] = {}
         self.metrics = CacheMetrics()
         self.clock = 0                     # internal logical time

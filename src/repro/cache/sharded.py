@@ -1,0 +1,276 @@
+"""Sharded resident store: multi-device semantic-cache lookup.
+
+Scales :class:`repro.cache.SemanticCache` capacity past one chip's HBM by
+partitioning the resident slab row-wise across the devices of a 1-D
+``("cache",)`` mesh (``repro.launch.mesh.make_cache_mesh``):
+
+  - **Layout** — :class:`ShardedStore` keeps one contiguous ``(S·R, D)``
+    slab viewed as ``(S, R, D)``: shard ``s`` owns rows
+    ``[s·R, (s+1)·R)``.  Slot placement routes every new entry onto the
+    least-loaded shard (ties → lowest shard id), and each shard tracks a
+    local high-water mark so device lookups only score its locally-valid
+    prefix (runtime ``n_valid``, scalar-prefetched into the kernel).
+  - **Lookup** — :class:`ShardedKernelBackend` runs ``kernels/ops.sim_top1``
+    per shard under ``shard_map`` (every device scores its own ``(R, D)``
+    block against the replicated query batch), ``all_gather``\\ s the
+    per-shard ``(val, local_idx)`` pairs and merges them with a single
+    argmax-reduce over the shard axis into global ``(cid, sim)``.
+  - **Eviction** — ``rac_value`` shards the resident-table entry axis over
+    the same mesh (each device scores its chunk with the ``rac_value``
+    kernel); ``shard_map`` stitches the chunks back into one value vector
+    and the policy's deterministic ``(value, last-access, cid)`` lexsort
+    takes the global min.  Doing the min inside the collective would lose
+    those tie-breaks, so the merge hands back values, not a victim.
+  - **Fallback** — with fewer devices than shards (e.g. a 1-device CPU
+    box) the backend loops the identical per-shard kernel + argmax merge
+    on one device, so hit/admit/evict decisions never depend on the
+    machine: ``tests/test_cache_api.py`` asserts decision parity with the
+    numpy backend for shard counts {1, 2, 4}.
+  - **Checkpoint/restore** — all sharded state (slab, per-shard free lists,
+    loads, high-water marks) lives in the store object; the facade's
+    ``checkpoint()`` deep copy captures it with no backend cooperation.
+    Device-side slabs are cached keyed by the store's globally-unique
+    mutation ``version`` stamp, so a restored snapshot re-attaches to its
+    uploaded slab for free and any divergence forces a re-upload.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.store import ResidentStore
+
+
+class ShardedStore(ResidentStore):
+    """Row-partitioned resident slab with least-loaded shard placement.
+
+    ``n_shards`` shards of ``rows_per_shard = ceil((capacity+1)/n_shards)``
+    rows each (the +1 is Alg. 1's insert-then-evict spare slot).  The numpy
+    arrays are the plain :class:`ResidentStore` layout, so every host-side
+    consumer (policies, the numpy backend, metrics) works unchanged — only
+    slot *placement* differs.
+    """
+
+    def __init__(self, capacity: int, dim: int, n_shards: int = 1):
+        n_shards = max(1, int(n_shards))
+        rows = -(-(capacity + 1) // n_shards)          # ceil division
+        super().__init__(capacity, dim, n_slots=rows * n_shards)
+        self.n_shards = n_shards
+        self.rows_per_shard = rows
+        # per-shard LIFO free lists mirror the parent's slot-reuse order,
+        # keeping each shard's occupied slots below its local high-water
+        # mark; the parent's single free list is retired so no stale copy
+        # rides along in checkpoints
+        self._free.clear()
+        self._free_by_shard = [list(range((s + 1) * rows - 1, s * rows - 1, -1))
+                               for s in range(n_shards)]
+        self.load = np.zeros(n_shards, dtype=np.int64)
+        self.local_hwm = np.zeros(n_shards, dtype=np.int64)
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.rows_per_shard
+
+    def shard_view(self) -> np.ndarray:
+        """The slab as ``(n_shards, rows_per_shard, D)`` (a zero-copy view)."""
+        return self.emb.reshape(self.n_shards, self.rows_per_shard, -1)
+
+    def _alloc(self) -> int:
+        shard = int(np.argmin(self.load))              # ties → lowest shard
+        slot = self._free_by_shard[shard].pop()
+        self.load[shard] += 1
+        local = slot - shard * self.rows_per_shard
+        if local + 1 > self.local_hwm[shard]:
+            self.local_hwm[shard] = local + 1
+        return slot
+
+    def _release(self, slot: int):
+        shard = self.shard_of(slot)
+        self._free_by_shard[shard].append(slot)
+        self.load[shard] -= 1
+
+
+class ShardedKernelBackend:
+    """Multi-device lookup/scoring over a :class:`ShardedStore`.
+
+    ``n_shards=None`` means one shard per addressable device.  When the
+    machine has at least ``n_shards`` devices the lookup runs under
+    ``shard_map`` on a ``("cache",)`` mesh; otherwise a per-shard loop on
+    one device computes the identical math (see module docstring).
+    ``use_pallas=False`` routes through the jnp oracles, as in
+    :class:`~repro.cache.backends.KernelBackend`.
+    """
+
+    name = "sharded"
+
+    def __init__(self, n_shards: int | None = None, use_pallas: bool = True,
+                 interpret: bool | None = None, q_pad: int = 8):
+        self._n_shards = n_shards
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.q_pad = max(1, q_pad)
+        self._mesh = None
+        self._mesh_built = False
+        self._lookup_fn = None
+        self._rac_fns: dict[float, object] = {}
+        self._slab_cache: dict[int, tuple] = {}    # store.version -> (slab, nv)
+
+    # ------------------------------------------------------------- topology
+    @property
+    def n_shards(self) -> int:
+        if self._n_shards is None:
+            import jax
+            self._n_shards = max(1, len(jax.devices()))
+        return self._n_shards
+
+    def make_store(self, capacity: int, dim: int) -> ShardedStore:
+        """Facade hook: the sharded backend owns its store geometry."""
+        return ShardedStore(capacity, dim, n_shards=self.n_shards)
+
+    def mesh(self):
+        """The 1-D cache mesh, or None on machines with too few devices."""
+        if not self._mesh_built:
+            from repro.launch.mesh import make_cache_mesh
+            self._mesh = make_cache_mesh(self.n_shards)
+            self._mesh_built = True
+        return self._mesh
+
+    # ---------------------------------------------------------- device slab
+    def _slab(self, store: ShardedStore):
+        """(S, R, D) slab + per-shard valid counts, cached by store version.
+
+        The version stamp is globally unique per mutation, so a checkpoint
+        restored from this store lineage re-attaches to its uploaded slab;
+        any divergent mutation forces a fresh upload.  (Host fallback keeps
+        a zero-copy numpy view, so the cache is free there.)
+        """
+        if self.mesh() is None:
+            # host fallback: the live zero-copy view is always current —
+            # caching it would alias rows the store later overwrites
+            return store.shard_view(), store.local_hwm.astype(np.int32)
+        hit = self._slab_cache.get(store.version)
+        if hit is not None:
+            return hit
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = NamedSharding(self._mesh, P("cache"))
+        slab = jax.device_put(np.ascontiguousarray(store.shard_view()), spec)
+        nv = jax.device_put(store.local_hwm.astype(np.int32), spec)
+        if len(self._slab_cache) >= 4:              # keep a few snapshots
+            self._slab_cache.pop(next(iter(self._slab_cache)))
+        self._slab_cache[store.version] = (slab, nv)
+        return slab, nv
+
+    # -------------------------------------------------------------- lookup
+    def _build_lookup(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels.ops import sim_top1_raw
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def local_top1(q, slab, nv):
+            # q (B, D) replicated; slab (1, R, D) / nv (1,) = this shard
+            vals, idx = sim_top1_raw(q, slab[0], nv[0],
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
+            gv = jax.lax.all_gather(vals, "cache")             # (S, B)
+            gi = jax.lax.all_gather(idx, "cache")              # (S, B)
+            win = jnp.argmax(gv, axis=0)       # ONE argmax-reduce over shards
+            b = jnp.arange(gv.shape[1])
+            return gv[win, b], win.astype(jnp.int32), gi[win, b]
+
+        return jax.jit(shard_map(
+            local_top1, mesh=self._mesh,
+            in_specs=(P(), P("cache"), P("cache")),
+            out_specs=(P(), P(), P()), check_rep=False))
+
+    def top1(self, store: ShardedStore, query: np.ndarray) -> tuple[int, float]:
+        cids, sims = self.top1_batch(store, np.asarray(query)[None, :])
+        return int(cids[0]), float(sims[0])
+
+    def top1_batch(self, store: ShardedStore,
+                   queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        if not store.slot_of:
+            return (np.full(b, -1, dtype=np.int64),
+                    np.full(b, -np.inf, dtype=np.float64))
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        slab, nv = self._slab(store)
+        rows = store.rows_per_shard
+        if self.mesh() is not None:
+            if self._lookup_fn is None:
+                self._lookup_fn = self._build_lookup()
+            vals, shard, local = self._lookup_fn(qp, slab, nv)
+            vals = np.asarray(vals[:b], dtype=np.float64)
+            gslot = (np.asarray(shard[:b], dtype=np.int64) * rows
+                     + np.asarray(local[:b], dtype=np.int64))
+        else:
+            # single-device fallback: same per-shard kernel, same merge
+            from repro.kernels import ops
+            per_v, per_i = [], []
+            for s in range(store.n_shards):
+                v, i = ops.sim_top1(qp, slab[s], n_valid=int(nv[s]),
+                                    use_pallas=self.use_pallas,
+                                    interpret=self.interpret)
+                per_v.append(np.asarray(v))
+                per_i.append(np.asarray(i))
+            gv = np.stack(per_v)                               # (S, B)
+            gi = np.stack(per_i)
+            win = np.argmax(gv, axis=0)
+            cols = np.arange(qp.shape[0])
+            vals = gv[win, cols][:b].astype(np.float64)
+            gslot = (win * rows + gi[win, cols])[:b].astype(np.int64)
+        cids = store.cid[gslot].copy()
+        # a free (zeroed) slot can only win when all real sims < 0 → miss
+        sims = np.where(cids >= 0, vals, -np.inf)
+        return cids, sims
+
+    # ------------------------------------------------------------- eviction
+    def _build_rac(self, alpha: float):
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels.ops import rac_value_raw
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def local_rac(tsi, tid, tp_last, t_last):
+            # tsi/tid (chunk,) = this shard's slice of the resident table
+            return rac_value_raw(tsi, tid, tp_last, t_last, alpha, 0,
+                                 use_pallas=use_pallas, interpret=interpret)
+
+        return jax.jit(shard_map(
+            local_rac, mesh=self._mesh,
+            in_specs=(P("cache"), P("cache"), P(), P()),
+            out_specs=P("cache"), check_rep=False))
+
+    def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
+        """Per-shard Eq. 1 scoring over the resident-table entry axis.
+
+        Each shard scores its chunk; the stitched value vector goes back to
+        the policy whose lexsort performs the global min-merge (keeping the
+        deterministic (value, last-access, cid) tie-breaks)."""
+        from repro.kernels import ops
+        tsi = np.asarray(tsi, dtype=np.float32)
+        tids = np.asarray(tids, dtype=np.int32)
+        tp_last = np.asarray(tp_last, dtype=np.float32)
+        # shift timestamps so t_now is the static constant 0 (no recompiles
+        # as simulation time advances; same trick as KernelBackend)
+        t_rel = np.asarray(t_last - t_now, dtype=np.int32)
+        n, s = tsi.shape[0], self.n_shards
+        if self.mesh() is None or n < s:
+            out = ops.rac_value(tsi, tids, tp_last, t_rel, float(alpha), 0,
+                                use_pallas=self.use_pallas,
+                                interpret=self.interpret)
+            return np.asarray(out, dtype=np.float64)
+        fn = self._rac_fns.get(float(alpha))
+        if fn is None:
+            fn = self._rac_fns[float(alpha)] = self._build_rac(float(alpha))
+        chunk = -(-n // s)
+        pad = chunk * s - n
+        out = fn(np.pad(tsi, (0, pad)), np.pad(tids, (0, pad)),
+                 tp_last, t_rel)
+        return np.asarray(out[:n], dtype=np.float64)

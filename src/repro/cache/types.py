@@ -20,18 +20,22 @@ class CacheConfig:
     ``"semantic"`` (Top-1 cosine >= tau_hit; the paper's semantic cache) and
     ``"content"`` (content-id residency; O(1), used for large sweeps).
     ``backend`` selects the lookup/scoring implementation: ``"numpy"`` (host
-    slab scan) or ``"kernel"`` (batched through ``kernels/ops.sim_top1`` and
-    ``kernels/ops.rac_value``); both produce identical hit decisions.
+    slab scan), ``"kernel"`` (batched through ``kernels/ops.sim_top1`` and
+    ``kernels/ops.rac_value``), or ``"sharded"`` (the slab row-partitioned
+    across the devices of a 1-D cache mesh with a shard_map Top-1 merge);
+    all produce identical hit decisions.  ``backend_kwargs`` are forwarded
+    to the backend constructor (e.g. ``{"n_shards": 4}`` for ``"sharded"``).
     """
 
     capacity: int
     dim: int
     tau_hit: float = 0.85
     hit_mode: str = "semantic"           # "semantic" | "content"
-    backend: str = "numpy"               # "numpy" | "kernel"
+    backend: str = "numpy"               # "numpy" | "kernel" | "sharded"
     policy: str = "RAC"                  # name in BASELINES or "RAC"
     policy_kwargs: dict = dataclasses.field(default_factory=dict)
-    use_pallas: bool = True              # kernel backend: pallas vs jnp oracle
+    use_pallas: bool = True              # device backends: pallas vs jnp oracle
+    backend_kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass

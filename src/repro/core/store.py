@@ -8,22 +8,39 @@ score over in O(m) vectorized time.
 Entries are keyed by content id (``cid``): re-admitting content that was
 evicted earlier re-uses the same key, which matches query-level caching in
 the paper (one entry per unique query content).
+
+Slot *placement* is a policy of the store subclass: the base class packs a
+single free-list (LIFO reuse, so occupied slots stay below a high-water
+mark ``hwm`` that device backends pass as the kernel's runtime ``n_valid``);
+:class:`repro.cache.sharded.ShardedStore` overrides ``_alloc``/``_release``
+to route new entries onto the least-loaded shard of a row-partitioned slab.
+``version`` is a globally-unique mutation stamp: two store objects carry
+the same version only if their slabs are identical (deep copies that have
+not diverged), which lets device backends cache an uploaded slab keyed by
+version alone.
 """
 from __future__ import annotations
 
+import itertools
+
 import numpy as np
+
+_STAMP = itertools.count(1)     # global mutation stamps (see class docstring)
 
 
 class ResidentStore:
-    def __init__(self, capacity: int, dim: int):
+    def __init__(self, capacity: int, dim: int, n_slots: int | None = None):
         # one spare slot: Alg.1 inserts first, then evicts while |C| > C
         self.capacity = capacity
-        n = capacity + 1
+        n = capacity + 1 if n_slots is None else n_slots
+        assert n >= capacity + 1
         self.emb = np.zeros((n, dim), dtype=np.float32)
         self.occ = np.zeros(n, dtype=bool)
         self.cid = np.full(n, -1, dtype=np.int64)
         self.slot_of: dict[int, int] = {}      # cid -> slot
         self._free: list[int] = list(range(n - 1, -1, -1))
+        self.hwm = 0                           # all occupied slots < hwm
+        self.version = next(_STAMP)
 
     def __len__(self) -> int:
         return len(self.slot_of)
@@ -34,13 +51,22 @@ class ResidentStore:
     def keys(self):
         return self.slot_of.keys()
 
+    # -- slot placement (overridden by sharded stores) ----------------------
+    def _alloc(self) -> int:
+        return self._free.pop()
+
+    def _release(self, slot: int):
+        self._free.append(slot)
+
     def insert(self, cid: int, emb: np.ndarray) -> int:
         assert cid not in self.slot_of
-        slot = self._free.pop()
+        slot = self._alloc()
         self.emb[slot] = emb
         self.occ[slot] = True
         self.cid[slot] = cid
         self.slot_of[cid] = slot
+        self.hwm = max(self.hwm, slot + 1)
+        self.version = next(_STAMP)
         return slot
 
     def remove(self, cid: int) -> int:
@@ -50,7 +76,8 @@ class ResidentStore:
         # zero the freed row: device backends score the full fixed-shape
         # slab, and a zero embedding can never clear tau_hit > 0
         self.emb[slot] = 0.0
-        self._free.append(slot)
+        self._release(slot)
+        self.version = next(_STAMP)
         return slot
 
     # -- semantic hit determination (identical for every policy) -----------

@@ -35,11 +35,12 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
     return jnp.pad(x, widths, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def sim_top1(queries, candidates, *, use_pallas: bool = True,
-             interpret: bool | None = None):
-    """Top-1 cosine retrieval: (Q,D)x(N,D) -> (vals (Q,), idx (Q,))."""
-    n_valid = candidates.shape[0]
+def sim_top1_raw(queries, candidates, n_valid, *, use_pallas: bool = True,
+                 interpret: bool | None = None):
+    """Un-jitted Top-1 body shared by :func:`sim_top1` and the sharded
+    backend (which calls it per shard inside a ``shard_map`` region).
+    ``n_valid`` may be a traced int32 scalar — it masks the candidate tail
+    at runtime, so one compilation serves every resident count."""
     if not use_pallas:
         return ref.sim_top1_ref(queries, candidates, n_valid)
     interp = _is_cpu() if interpret is None else interpret
@@ -49,6 +50,26 @@ def sim_top1(queries, candidates, *, use_pallas: bool = True,
                                 cp.astype(jnp.float32),
                                 n_valid, interpret=interp)
     return vals[: queries.shape[0]], idx[: queries.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _sim_top1_jit(queries, candidates, n_valid, *, use_pallas, interpret):
+    return sim_top1_raw(queries, candidates, n_valid, use_pallas=use_pallas,
+                        interpret=interpret)
+
+
+def sim_top1(queries, candidates, n_valid=None, *, use_pallas: bool = True,
+             interpret: bool | None = None):
+    """Top-1 cosine retrieval: (Q,D)x(N,D) -> (vals (Q,), idx (Q,)).
+
+    ``n_valid`` (default: all of ``candidates``) is a *runtime* resident
+    count: rows at or past it are masked to -inf, so compacted and
+    per-shard stores stop scoring their free tail without triggering a
+    recompile per count."""
+    if n_valid is None:
+        n_valid = candidates.shape[0]
+    return _sim_top1_jit(queries, candidates, jnp.int32(n_valid),
+                         use_pallas=use_pallas, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -76,11 +97,10 @@ def decode_attention(q, k, v, pos, *, use_pallas: bool = True,
     return decode_attention_pallas(q, k, v, pos, interpret=interp)
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "t_now", "use_pallas",
-                                             "interpret"))
-def rac_value(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
-              use_pallas: bool = True, interpret: bool | None = None):
-    """RAC Eq.1 scoring over the resident table."""
+def rac_value_raw(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
+                  use_pallas: bool = True, interpret: bool | None = None):
+    """Un-jitted RAC Eq.1 body shared by :func:`rac_value` and the sharded
+    backend (per-shard scoring of a chunk of the resident table)."""
     if not use_pallas:
         return ref.rac_value_ref(tsi, tid, tp_last, t_last, alpha, t_now)
     interp = _is_cpu() if interpret is None else interpret
@@ -90,3 +110,12 @@ def rac_value(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
     out = rac_value_pallas(tp, ti, tp_last, t_last, alpha, t_now,
                            interpret=interp)
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "t_now", "use_pallas",
+                                             "interpret"))
+def rac_value(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
+              use_pallas: bool = True, interpret: bool | None = None):
+    """RAC Eq.1 scoring over the resident table."""
+    return rac_value_raw(tsi, tid, tp_last, t_last, alpha, t_now,
+                         use_pallas=use_pallas, interpret=interpret)

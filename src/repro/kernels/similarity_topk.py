@@ -6,25 +6,33 @@ design: the (queries × candidates) score tile is one MXU matmul per grid
 cell; a running (max, argmax) merge lives in the revisited output block
 while candidate tiles stream HBM→VMEM.
 
+``n_valid`` is a *runtime* scalar delivered through scalar prefetch
+(``PrefetchScalarGridSpec``), so compacted and per-shard stores can mask
+their free tail without recompiling as the resident count changes — the
+kernel sees one stable (Q, N, D) shape per store geometry.
+
 Tiling: (BQ=128 queries × BC=512 candidates × D) per grid cell; with D=128
 fp32 that is  128·128·4 + 512·128·4 + 128·512·4  ≈ 0.6 MB of VMEM per cell,
 MXU-aligned on every matmul dim.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BQ = 128      # query tile
 BC = 512      # candidate tile
 
 
-def _sim_top1_kernel(q_ref, c_ref, val_ref, idx_ref, *, n_valid: int):
-    """grid = (nq, nc); candidate axis is a sequential reduction."""
+def _sim_top1_kernel(nv_ref, q_ref, c_ref, val_ref, idx_ref):
+    """grid = (nq, nc); candidate axis is a sequential reduction.
+
+    ``nv_ref`` is the scalar-prefetched resident count: columns at or past
+    it (free tail rows, padding) are masked to -inf before the merge."""
     j = pl.program_id(1)
+    n_valid = nv_ref[0]
     q = q_ref[...]                                   # (BQ, D)
     c = c_ref[...]                                   # (BC, D)
     scores = jax.lax.dot_general(
@@ -49,22 +57,25 @@ def _sim_top1_kernel(q_ref, c_ref, val_ref, idx_ref, *, n_valid: int):
 
 
 def sim_top1_pallas(queries: jnp.ndarray, candidates: jnp.ndarray,
-                    n_valid: int, *, interpret: bool = True):
+                    n_valid, *, interpret: bool = True):
     """queries (Q, D), candidates (N, D) both padded to tile multiples;
-    returns (vals (Q,), idx (Q,)).  ``n_valid`` masks candidate padding."""
+    returns (vals (Q,), idx (Q,)).  ``n_valid`` is a runtime scalar (python
+    int or traced int32) masking the candidate tail — free slots beyond the
+    resident high-water mark and padding rows never win Top-1."""
     q_n, d = queries.shape
     c_n = candidates.shape[0]
     assert q_n % BQ == 0 and c_n % BC == 0 and d % 128 == 0
-    grid = (q_n // BQ, c_n // BC)
-    kernel = functools.partial(_sim_top1_kernel, n_valid=n_valid)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_n // BQ, c_n // BC),
+        in_specs=[pl.BlockSpec((BQ, d), lambda i, j, nv: (i, 0)),
+                  pl.BlockSpec((BC, d), lambda i, j, nv: (j, 0))],
+        out_specs=[pl.BlockSpec((BQ,), lambda i, j, nv: (i,)),
+                   pl.BlockSpec((BQ,), lambda i, j, nv: (i,))])
     return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((BQ, d), lambda i, j: (i, 0)),
-                  pl.BlockSpec((BC, d), lambda i, j: (j, 0))],
-        out_specs=[pl.BlockSpec((BQ,), lambda i, j: (i,)),
-                   pl.BlockSpec((BQ,), lambda i, j: (i,))],
+        _sim_top1_kernel,
+        grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((q_n,), jnp.float32),
                    jax.ShapeDtypeStruct((q_n,), jnp.int32)],
         interpret=interpret,
-    )(queries, candidates)
+    )(jnp.asarray(n_valid, jnp.int32).reshape(1), queries, candidates)

@@ -27,6 +27,24 @@ def make_local_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_cache_mesh(n_shards: int):
+    """1-D ``("cache",)`` mesh over the first ``n_shards`` devices for the
+    sharded semantic-cache resident store (row-partitioned slab, one shard
+    per device).
+
+    Returns ``None`` when fewer devices exist (or ``n_shards <= 1``) —
+    callers fall back to a single-device per-shard loop that computes the
+    identical per-shard/merge math, so shard-count semantics never depend
+    on the machine the code happens to run on.
+    """
+    import numpy as np
+    devices = jax.devices()
+    if n_shards <= 1 or len(devices) < n_shards:
+        return None
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n_shards]), ("cache",))
+
+
 def abstract_mesh(shape, axis_names):
     """Version-portable ``jax.sharding.AbstractMesh`` construction.
 

@@ -40,7 +40,9 @@ class EngineConfig:
     max_batch: int = 8            # continuous-batching slot count
     max_seq: int = 256
     emb_dim: int = 64
-    cache_backend: str = "numpy"  # "numpy" | "kernel" (device sim_top1)
+    cache_backend: str = "numpy"  # "numpy" | "kernel" | "sharded"
+                                  # (device sim_top1; sharded = multi-device
+                                  #  slab, see repro/cache/sharded.py)
 
 
 @dataclasses.dataclass

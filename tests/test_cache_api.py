@@ -1,12 +1,18 @@
 """The unified SemanticCache facade: protocol parity with the historical
-simulator loop, numpy-vs-kernel backend equivalence, payload/eviction
-hooks, checkpoint/restore, and the no-inline-cache-logic guarantee for the
+simulator loop, numpy-vs-kernel backend equivalence, sharded-vs-numpy
+decision parity across shard counts, payload/eviction hooks,
+checkpoint/restore, and the no-inline-cache-logic guarantee for the
 serving engine."""
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
 from repro.cache import (CacheConfig, CacheHit, CacheMiss, KernelBackend,
-                         NumpyBackend, SemanticCache, get_backend)
+                         NumpyBackend, SemanticCache, ShardedKernelBackend,
+                         ShardedStore, get_backend)
 from repro.core import (EmbeddingSpace, SynthConfig, default_factories,
                         run_policy, synthetic_trace)
 from repro.core.store import ResidentStore
@@ -190,6 +196,191 @@ def test_content_mode_lookup_batch():
     cache.admit_batch([0, 1], embs[:2])
     rs = cache.lookup_batch(embs, cids=[0, 1, 2, 3])
     assert [r.hit for r in rs] == [True, True, False, False]
+
+
+# ------------------------------------------------------ sharded store parity
+def _replay_decisions(trace, capacity, backend, n_requests=2000, **bkw):
+    """Replay a trace slice through the facade, recording every decision
+    (hit cids, admissions, eviction victims) via the event hooks."""
+    dim = trace.requests[0].emb.shape[0]
+    cache = SemanticCache(CacheConfig(capacity=capacity, dim=dim,
+                                      backend=backend, policy="RAC",
+                                      use_pallas=False, backend_kwargs=bkw))
+    events = []
+    for kind in ("hit", "miss", "admit", "evict"):
+        cache.subscribe(kind, lambda ev, k=kind: events.append((k, ev.cid)))
+    for req in trace.requests[:n_requests]:
+        r = cache.lookup(req.emb, cid=req.cid, t=req.t, req=req)
+        if not r.hit:
+            cache.admit(req.cid, req.emb, t=req.t, req=req)
+    return events, cache
+
+
+@pytest.fixture(scope="module")
+def numpy_decisions(trace_10k):
+    cap = int(0.1 * trace_10k.meta["unique"])
+    return _replay_decisions(trace_10k, cap, "numpy")
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_matches_numpy_decisions(trace_10k, numpy_decisions, n_shards):
+    """The acceptance criterion: identical hit/miss cids, admissions, and
+    eviction victims across shard counts — RAC policy, semantic mode."""
+    cap = int(0.1 * trace_10k.meta["unique"])
+    ev_n, cache_n = numpy_decisions
+    ev_s, cache_s = _replay_decisions(trace_10k, cap, "sharded",
+                                      n_shards=n_shards)
+    assert ev_s == ev_n
+    assert isinstance(cache_s.store, ShardedStore)
+    assert cache_s.store.n_shards == n_shards
+    m_n, m_s = cache_n.metrics, cache_s.metrics
+    assert (m_s.hits, m_s.misses, m_s.evictions) == \
+           (m_n.hits, m_n.misses, m_n.evictions)
+    # row partitioning really happened: per-shard load counters agree with
+    # an exact recount of where every resident slot actually lives (strict
+    # balance is NOT an invariant — evictions pick victims by value, not
+    # by shard — so only the bookkeeping is asserted)
+    store = cache_s.store
+    recount = np.bincount([s // store.rows_per_shard
+                           for s in store.slot_of.values()],
+                          minlength=store.n_shards)
+    np.testing.assert_array_equal(store.load, recount)
+    assert store.load.sum() == len(store)
+
+
+def test_sharded_lookup_batch_matches_numpy_pallas():
+    """Small-batch parity with the Pallas kernel path active per shard."""
+    cn, space, embs = _filled_cache("numpy")
+    cs = SemanticCache(CacheConfig(capacity=50, dim=64, backend="sharded",
+                                   policy="LRU",
+                                   backend_kwargs={"n_shards": 4}))
+    for i, e in enumerate(embs):
+        cs.admit(i, e, payload=[i])
+    queries = np.stack(
+        [space.paraphrase(embs[i], i % 8, i, 1).astype(np.float32)
+         for i in range(len(embs))]
+        + [space.content_embedding(9, 1000 + j).astype(np.float32)
+           for j in range(8)])
+    n_cids, n_sims = cn.peek_batch(queries)
+    s_cids, s_sims = cs.peek_batch(queries)
+    np.testing.assert_array_equal(n_cids, s_cids)
+    np.testing.assert_allclose(n_sims, s_sims, atol=1e-5)
+
+
+def test_sharded_empty_and_all_slots_free():
+    """Lookups against an empty sharded cache (all slots free) miss with
+    best_cid -1; a store with occupied and empty shards still resolves."""
+    space = EmbeddingSpace(dim=32, seed=3)
+    cache = SemanticCache(CacheConfig(capacity=6, dim=32, policy="LRU",
+                                      backend="sharded", use_pallas=False,
+                                      backend_kwargs={"n_shards": 4}))
+    e = [space.content_embedding(0, i).astype(np.float32) for i in range(3)]
+    r = cache.lookup(e[0], cid=0)
+    assert isinstance(r, CacheMiss) and r.best_cid == -1
+    cache.admit(0, e[0])                        # 3 of 4 shards stay empty
+    assert (cache.store.load > 0).sum() == 1
+    assert cache.lookup(e[0], cid=0).hit
+    r = cache.lookup(e[1], cid=1)
+    assert not r.hit and r.best_cid == 0        # nearest resident reported
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_capacity_boundary(n_shards):
+    """Exactly capacity admissions → no eviction; one more → exactly one,
+    with the same victim the numpy backend elects."""
+    rng = np.random.default_rng(4)
+    cap, dim = 8, 32
+    embs = rng.standard_normal((cap + 1, dim)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+
+    def fill(backend, **bkw):
+        c = SemanticCache(CacheConfig(capacity=cap, dim=dim, policy="RAC",
+                                      backend=backend, use_pallas=False,
+                                      backend_kwargs=bkw))
+        evicted = []
+        for i in range(cap):
+            evicted += c.admit(i, embs[i])
+        assert evicted == [] and len(c) == cap
+        evicted = c.admit(cap, embs[cap])
+        assert len(evicted) == 1 and len(c) == cap
+        return evicted
+
+    assert fill("sharded", n_shards=n_shards) == fill("numpy")
+
+
+def test_sharded_checkpoint_restore_roundtrip():
+    """All sharded state (slab, free lists, loads, hwm) survives the
+    facade's checkpoint/restore with no backend cooperation."""
+    space = EmbeddingSpace(dim=64, seed=5)
+    cache = SemanticCache(CacheConfig(capacity=32, dim=64, policy="LRU",
+                                      backend="sharded", use_pallas=False,
+                                      backend_kwargs={"n_shards": 4}))
+    embs = [space.content_embedding(i % 8, i).astype(np.float32)
+            for i in range(30)]
+    for i, e in enumerate(embs):
+        cache.admit(i, e, payload=[i])
+    cache.lookup(embs[3], cid=3)
+    snap = cache.checkpoint()
+    before = (sorted(cache.store.keys()), cache.store.load.tolist(),
+              cache.store.local_hwm.tolist(), cache.metrics.hits)
+    for j in range(50):
+        cache.admit(2000 + j,
+                    space.content_embedding(11, 2000 + j).astype(np.float32))
+    assert sorted(cache.store.keys()) != before[0]
+    cache.restore(snap)
+    after = (sorted(cache.store.keys()), cache.store.load.tolist(),
+             cache.store.local_hwm.tolist(), cache.metrics.hits)
+    assert after == before
+    assert cache.lookup(embs[3], cid=3).hit
+
+
+def test_sharded_shard_map_path_in_subprocess():
+    """With enough devices the mesh path (shard_map + all_gather argmax
+    merge) is exercised end-to-end and agrees with the numpy backend."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4").strip()
+import numpy as np
+from repro.cache import NumpyBackend, ShardedKernelBackend, ShardedStore
+rng = np.random.default_rng(1)
+store = ShardedStore(300, 64, n_shards=4)
+embs = rng.standard_normal((200, 64)).astype(np.float32)
+embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+for i in range(200):
+    store.insert(i, embs[i])
+store.remove(7); store.remove(90)
+q = rng.standard_normal((64, 64)).astype(np.float32)
+q /= np.linalg.norm(q, axis=1, keepdims=True)
+sb = ShardedKernelBackend(n_shards=4, use_pallas=False)
+assert sb.mesh() is not None, "mesh must be active with 4 devices"
+nc, ns = NumpyBackend().top1_batch(store, q)
+sc, ss = sb.top1_batch(store, q)
+np.testing.assert_array_equal(nc, sc)
+np.testing.assert_allclose(ns, ss, atol=1e-5)
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_get_backend_kwargs_uniform():
+    """kwargs pass through to every backend; unexpected ones raise instead
+    of being silently dropped."""
+    b = get_backend("sharded", n_shards=2, use_pallas=False)
+    assert isinstance(b, ShardedKernelBackend) and b.n_shards == 2
+    with pytest.raises(TypeError):
+        get_backend("numpy", use_pallas=True)
+    with pytest.raises(TypeError):
+        get_backend("kernel", n_shards=2)
+    with pytest.raises(ValueError):
+        get_backend(NumpyBackend(), use_pallas=True)
+    assert isinstance(get_backend(NumpyBackend()), NumpyBackend)
 
 
 # ----------------------------------------------------------- engine facade

@@ -26,6 +26,34 @@ def test_sim_top1(rng, q_n, c_n, d, dtype):
                                    atol=2e-2)
 
 
+@pytest.mark.parametrize("n_valid", [0, 1, 3, 700, 901])
+def test_sim_top1_dynamic_n_valid(rng, n_valid):
+    """The resident count is a runtime scalar: one jitted callable serves
+    every fill level, masking the candidate tail past ``n_valid``."""
+    q = jnp.asarray(rng.standard_normal((37, 64)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((901, 64)), jnp.float32)
+    v1, i1 = ops.sim_top1(q, c, n_valid=n_valid)
+    v2, i2 = ref.sim_top1_ref(q, c, n_valid)
+    if n_valid == 0:
+        assert np.all(np.asarray(v1) == -np.inf)
+        return
+    np.testing.assert_allclose(v1, v2, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert np.asarray(i1).max() < n_valid       # free tail never wins
+
+
+def test_sim_top1_n_valid_no_recompile(rng):
+    """Varying n_valid must not recompile (it is traced, not static)."""
+    q = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((512, 64)), jnp.float32)
+    ops.sim_top1(q, c, n_valid=512)
+    from repro.kernels.ops import _sim_top1_jit
+    sizes0 = _sim_top1_jit._cache_size()
+    for nv in (1, 5, 200, 511):
+        ops.sim_top1(q, c, n_valid=nv)
+    assert _sim_top1_jit._cache_size() == sizes0
+
+
 @pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 128),
                                          (2, 4, 2, 200, 128),
                                          (1, 8, 2, 300, 128),
