@@ -13,7 +13,8 @@ import sys
 
 from . import (cache_api_bench, faithfulness, fig1_example, fig2_stress,
                fig3_real, fig4_ablation, fig5_sensitivity, kernel_bench,
-               overhead, roofline, sharded_lookup_bench)
+               overhead, roofline, serving_async_bench,
+               sharded_lookup_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -27,6 +28,7 @@ SUITES = {
     "roofline": roofline.main,     # dry-run roofline table
     "cache_api": lambda: cache_api_bench.main([]),  # facade lookup throughput
     "sharded": lambda: sharded_lookup_bench.main([]),  # multi-device lookup
+    "serving_async": lambda: serving_async_bench.main([]),  # admit slot stall
 }
 
 

@@ -1,0 +1,110 @@
+"""Slot-stall benchmark: blocking vs event-driven (async) admission.
+
+Measures the time generation slots spend blocked on cache admission
+(insert + RAC eviction scoring) in the serving engine:
+
+  - **blocking**: every completed slot pays the full insert-then-evict
+    cost inline (``slot_stall_s`` == the facade's ``admit_s``);
+  - **async**: a completed slot only enqueues; the background worker
+    drains off the slot loop and the engine settles the queue with one
+    ``flush()`` per batch boundary while there are still waiting requests
+    (``slot_stall_s`` == enqueue time, ``flush_s`` == boundary waits).
+
+The cache is pre-filled to capacity so every admission triggers a victim
+scan, which is the cost the async path moves off the request path.
+Request outputs are identical in both modes (asserted here, tested in
+``tests/test_serving.py``).
+
+    PYTHONPATH=src python -m benchmarks.serving_async_bench
+    PYTHONPATH=src python -m benchmarks.serving_async_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SynthConfig, synthetic_trace
+from repro.models import smoke_variant
+from repro.serving import EngineConfig, ServingEngine
+
+from .common import emit, save_json
+
+
+def _requests(n: int, vocab: int, seed: int = 7):
+    trace = synthetic_trace(SynthConfig(trace_len=n, n_topics=24, seed=seed))
+    rng = np.random.default_rng(seed)
+    return [(r.cid, r.emb, list(rng.integers(2, vocab, size=4)))
+            for r in trace.requests]
+
+
+def run_once(async_admit: bool, n_requests: int, capacity: int,
+             max_batch: int) -> dict:
+    mcfg = smoke_variant(get_config("paper"))
+    eng = ServingEngine(mcfg, EngineConfig(
+        cache_capacity=capacity, max_new_tokens=8, max_batch=max_batch,
+        max_seq=96, async_admit=async_admit))
+    # pre-fill to capacity: every admission during the run evicts
+    rng = np.random.default_rng(3)
+    warm = rng.standard_normal((capacity, eng.cfg.emb_dim)).astype(np.float32)
+    warm /= np.linalg.norm(warm, axis=1, keepdims=True)
+    for i in range(capacity):
+        eng.cache.admit(10_000 + i, warm[i], payload=[0])
+    eng.cache.flush()
+    base_stall = eng.cache.metrics.admit_s       # exclude warmup from stall
+    base_enq = (eng.cache.admitter.enqueue_s if eng.cache.admitter else 0.0)
+
+    t0 = time.perf_counter()
+    done = eng.run(_requests(n_requests, mcfg.vocab_size))
+    wall = time.perf_counter() - t0
+    s = eng.stats
+    batches = max(1, s["batches"])
+    if async_admit:
+        slot_stall = eng.cache.admitter.enqueue_s - base_enq
+        flush_s = eng.cache.admitter.flush_s
+    else:
+        slot_stall = eng.cache.metrics.admit_s - base_stall
+        flush_s = 0.0
+    row = {"mode": "async" if async_admit else "blocking",
+           "requests": len(done), "batches": s["batches"], "wall_s": wall,
+           "slot_stall_s": slot_stall, "flush_s": flush_s,
+           "slot_stall_per_batch_us": 1e6 * slot_stall / batches,
+           "hits": s["hits"], "evictions": s["evictions"]}
+    outputs = [(r.rid, r.cached, tuple(r.out_tokens)) for r in done]
+    eng.close()
+    return row, outputs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--capacity", type=int, default=None)
+    args = ap.parse_args(argv)
+    n = args.requests or (48 if args.smoke else 192)
+    cap = args.capacity or (512 if args.smoke else 2048)
+    rows = []
+    out_by_mode = {}
+    for async_admit in (False, True):
+        row, outputs = run_once(async_admit, n, cap, max_batch=16)
+        out_by_mode[row["mode"]] = outputs
+        rows.append(row)
+        emit(f"serving_admit/{row['mode']}",
+             row["slot_stall_per_batch_us"],
+             f"slot_stall={row['slot_stall_s'] * 1e3:.2f}ms,"
+             f"flush={row['flush_s'] * 1e3:.2f}ms,hits={row['hits']}")
+    assert out_by_mode["blocking"] == out_by_mode["async"], \
+        "async admission changed request outputs"
+    stall = {r["mode"]: r["slot_stall_s"] for r in rows}
+    speedup = stall["blocking"] / max(stall["async"], 1e-9)
+    emit("serving_admit/speedup", 0.0, f"slot_stall_ratio={speedup:.1f}x")
+    save_json("serving_async_bench.json",
+              {"rows": rows, "slot_stall_speedup": speedup})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -20,9 +20,13 @@ N_REQUESTS = 300
 CAPACITY = 96
 
 mcfg = smoke_variant(get_config("paper"))
+# async_admit: completed slots enqueue their admission; a background
+# worker pays insert + RAC eviction scoring off the generation loop and
+# the engine flushes the queue at batch boundaries (same outputs as
+# blocking admission — tests/test_serving.py asserts it)
 engine = ServingEngine(mcfg, EngineConfig(cache_capacity=CAPACITY,
                                           max_new_tokens=8, max_batch=8,
-                                          max_seq=96))
+                                          max_seq=96, async_admit=True))
 
 # the engine's cache is the unified repro.cache.SemanticCache — observe
 # evictions through the event hook surface instead of poking internals
@@ -53,9 +57,16 @@ m = engine.cache.metrics
 print(f"  cache: {m.evictions} evictions ({len(evicted)} seen by hook), "
       f"lookup {1e3 * m.lookup_s:.1f} ms total / "
       f"{1e6 * m.lookup_s / max(1, m.lookups):.0f} us per op")
+adm = engine.cache.admitter
+print(f"  async admission: slot stall {1e3 * adm.enqueue_s:.2f} ms "
+      f"(enqueue only), flush waits {1e3 * adm.flush_s:.2f} ms, "
+      f"{adm.applied} applied in background")
+engine.close()
 
 # --- KV prefix-block reuse under RAC scoring --------------------------
-print("\n[kv-prefix] RAC-scored radix block manager:")
+# the block manager rides the SAME facade (content mode + RadixRAC):
+# block eviction shares the metrics/hook surface with the response cache
+print("\n[kv-prefix] RAC-scored radix block manager (facade-routed):")
 mgr = KVBlockManager(n_blocks=48, block_tokens=8)
 hot_prefix = list(range(32))                 # a popular system prompt
 hit_tokens = total_tokens = 0
@@ -67,5 +78,8 @@ for i in range(120):
     r = mgr.on_request(conv)
     hit_tokens += r["hit_tokens"]
     total_tokens += len(conv)
+km = mgr.cache.metrics
 print(f"  prefix tokens served from cache: {hit_tokens}/{total_tokens} "
       f"({hit_tokens / total_tokens:.1%}); blocks used {mgr.used}/48")
+print(f"  facade metrics: block hit_ratio={km.hit_ratio:.3f} "
+      f"({km.hits} hits / {km.misses} misses, {km.evictions} evictions)")

@@ -1,12 +1,22 @@
-"""Unified semantic-cache subsystem: one batched, backend-pluggable API.
+"""Unified semantic-cache subsystem: one batched, backend-pluggable,
+event-driven API.
 
 :class:`SemanticCache` owns hit determination, admission, and eviction
-end-to-end; the trace simulator, the serving engine, the examples, and the
-benchmarks all sit behind it.  Lookups dispatch through a pluggable
-:class:`LookupBackend` — :class:`NumpyBackend` scans the host slab,
-:class:`KernelBackend` batches Top-1 retrieval through the
-``kernels/ops.sim_top1`` Pallas kernel and scores evictions with
+end-to-end; the trace simulator, the serving engine, the KV prefix-block
+manager, the examples, and the benchmarks all sit behind it.  Lookups
+dispatch through a pluggable :class:`LookupBackend` — :class:`NumpyBackend`
+scans the host slab, :class:`KernelBackend` batches Top-1 retrieval through
+the ``kernels/ops.sim_top1`` Pallas kernel and scores evictions with
 ``kernels/ops.rac_value`` on device — with identical hit decisions.
+
+The facade is *event-driven*: every transition fires a subscribable hook
+(``"hit" | "miss" | "admit" | "evict"``), and admission itself can leave
+the request path — with ``CacheConfig.async_admit`` an
+:class:`~repro.cache.async_admit.AsyncAdmitter` queues admissions and a
+background worker (or a deterministic ``flush()`` drain) applies insert +
+eviction scoring off the caller's thread, firing the same hooks and
+metrics.  After a ``flush()`` the state is identical to synchronous
+admission, so replay parity and checkpointing are preserved.
 
 Usage::
 
@@ -65,8 +75,12 @@ outcomes on the same request stream):
     loop on one device, so decisions are topology-independent.
 
 Capacity therefore scales with the mesh: each device holds and scores only
-``1/n_shards`` of the resident slab.
+``1/n_shards`` of the resident slab.  The sharded device slab syncs
+incrementally: the store journals which rows each mutation touched, and
+the backend scatters only the dirty rows into the cached device slab
+instead of re-uploading the whole thing.
 """
+from .async_admit import AsyncAdmitter
 from .backends import (KernelBackend, LookupBackend, NumpyBackend,
                        get_backend)
 from .facade import SemanticCache
@@ -78,4 +92,5 @@ __all__ = [
     "SemanticCache", "CacheConfig", "CacheHit", "CacheMiss", "CacheResult",
     "CacheEvent", "CacheMetrics", "LookupBackend", "NumpyBackend",
     "KernelBackend", "ShardedKernelBackend", "ShardedStore", "get_backend",
+    "AsyncAdmitter",
 ]

@@ -58,10 +58,27 @@ class LookupBackend(Protocol):
         """Top-1 residents for (B, D) queries -> (cids (B,), sims (B,))."""
         ...
 
+    def top1_rows(self, store: ResidentStore, queries: np.ndarray,
+                  rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Top-1 restricted to the given store ``rows`` (slot indices) —
+        the same cosine scoring as :meth:`top1_batch`, so an incremental
+        rescan over recently-admitted rows can never disagree with a full
+        peek near ``tau_hit``."""
+        ...
+
     def rac_value(self, tsi: np.ndarray, tids: np.ndarray,
                   tp_last: np.ndarray, t_last: np.ndarray,
                   alpha: float, t_now: int) -> np.ndarray:
         """RAC Eq. 1 ``2^(-alpha·(t_now - t_last[tid])) · TP_last[tid] · tsi``."""
+        ...
+
+    def rac_value_masked(self, tsi: np.ndarray, tids: np.ndarray,
+                         tp_last: np.ndarray, t_last: np.ndarray,
+                         alpha: float, t_now: int,
+                         valid: np.ndarray) -> np.ndarray:
+        """Eq. 1 with a validity mask: invalid entries score ``+inf``
+        (used by radix block eviction, where structurally-protected blocks
+        must never win the min-value victim scan)."""
         ...
 
 
@@ -86,9 +103,24 @@ class NumpyBackend:
         return (store.cid[idx].copy(),
                 sims[np.arange(b), idx].astype(np.float64))
 
+    def top1_rows(self, store: ResidentStore, queries: np.ndarray,
+                  rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, dtype=np.float32)
+        rows = np.asarray(rows, dtype=np.int64)
+        sims = queries @ store.emb[rows].T                # (B, len(rows))
+        best = np.argmax(sims, axis=1)
+        b = np.arange(queries.shape[0])
+        return (store.cid[rows[best]].copy(),
+                sims[b, best].astype(np.float64))
+
     def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
         decay = 0.5 ** (alpha * (t_now - t_last[tids]))
         return decay * tp_last[tids] * tsi
+
+    def rac_value_masked(self, tsi, tids, tp_last, t_last, alpha, t_now,
+                         valid):
+        vals = self.rac_value(tsi, tids, tp_last, t_last, alpha, t_now)
+        return np.where(np.asarray(valid, dtype=bool), vals, np.inf)
 
 
 class KernelBackend:
@@ -135,6 +167,39 @@ class KernelBackend:
         # a free (zeroed) slot can only win when all real sims < 0 → miss
         sims = np.where(cids >= 0, vals, -np.inf)
         return cids, sims
+
+    def top1_rows(self, store: ResidentStore, queries: np.ndarray,
+                  rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        from repro.kernels import ops
+        queries = np.asarray(queries, dtype=np.float32)
+        rows = np.asarray(rows, dtype=np.int64)
+        b, k = queries.shape[0], rows.shape[0]
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        # gather the restricted candidate block; its row count is padded to
+        # a bucket so XLA compiles one kernel per bucket, not per count —
+        # the runtime n_valid masks the zero tail exactly as in top1_batch
+        kp = -(-k // 64) * 64
+        cand = np.zeros((kp, store.emb.shape[1]), dtype=np.float32)
+        cand[:k] = store.emb[rows]
+        vals, idx = ops.sim_top1(qp, cand, n_valid=k,
+                                 use_pallas=self.use_pallas,
+                                 interpret=self.interpret)
+        vals = np.asarray(vals[:b], dtype=np.float64)
+        idx = np.asarray(idx[:b])
+        return store.cid[rows[idx]].copy(), vals
+
+    def rac_value_masked(self, tsi, tids, tp_last, t_last, alpha, t_now,
+                         valid):
+        from repro.kernels import ops
+        out = ops.rac_value_masked(
+            np.asarray(tsi, dtype=np.float32),
+            np.asarray(tids, dtype=np.int32),
+            np.asarray(tp_last, dtype=np.float32),
+            np.asarray(t_last - t_now, dtype=np.int32),
+            np.asarray(valid, dtype=bool), float(alpha), 0,
+            use_pallas=self.use_pallas, interpret=self.interpret)
+        return np.asarray(out, dtype=np.float64)
 
     def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
         from repro.kernels import ops

@@ -20,10 +20,19 @@ backend call (one ``sim_top1`` kernel launch under the kernel backend).
 A batched lookup scores every query against the store *snapshot* at call
 time; hits are revalidated against residency when results are applied, so
 interleaved evictions can never produce a stale hit.
+
+Event-driven admission: with ``cfg.async_admit`` set, ``admit`` enqueues
+onto an :class:`~repro.cache.async_admit.AsyncAdmitter` and returns
+immediately — a background worker (or a deterministic ``flush()`` drain)
+applies insert + eviction scoring off the request path, firing the same
+hooks and metrics as the synchronous path.  All mutable state is guarded
+by one reentrant lock so concurrent lookups never observe a half-applied
+admission.
 """
 from __future__ import annotations
 
 import copy
+import threading
 import time
 from typing import Any, Callable, Optional, Sequence
 
@@ -40,11 +49,19 @@ PolicyFactory = Callable[[int, ResidentStore], Any]
 
 _MUTABLE_STATE = ("store", "policy", "payloads", "clock", "metrics")
 
+# policy hook attribute -> backend method wired into it (device-side
+# eviction scoring: RAC consumes Eq. 1 values, RadixRAC the masked variant)
+_VALUE_HOOKS = (("value_backend", "rac_value"),
+                ("masked_value_backend", "rac_value_masked"))
+
 
 def _make_policy(cfg: CacheConfig, store: ResidentStore):
     if cfg.policy == "RAC":
         from repro.core.rac import RACPolicy
         return RACPolicy(cfg.capacity, store, **cfg.policy_kwargs)
+    if cfg.policy == "RadixRAC":
+        from repro.core.radix import RadixRACPolicy
+        return RadixRACPolicy(cfg.capacity, store, **cfg.policy_kwargs)
     from repro.core.policies import BASELINES
     return BASELINES[cfg.policy](cfg.capacity, store, **cfg.policy_kwargs)
 
@@ -85,10 +102,19 @@ class SemanticCache:
         self.metrics = CacheMetrics()
         self.clock = 0                     # internal logical time
         self._hooks: dict[str, list[Callable[[CacheEvent], None]]] = {}
-        # device-side eviction scoring: RAC consumes the backend's
-        # rac_value if the policy exposes the hook (core/rac.py)
-        if hasattr(self.policy, "value_backend"):
-            self.policy.value_backend = self.backend.rac_value
+        self._lock = threading.RLock()     # guards all mutable state
+        self._wire_value_backend()
+        # event-driven admission: enqueue + background/deterministic drain
+        self.admitter = None
+        if cfg.async_admit:
+            from .async_admit import AsyncAdmitter
+            self.admitter = AsyncAdmitter(
+                self, background=cfg.async_admit != "sync")
+
+    def _wire_value_backend(self):
+        for attr, method in _VALUE_HOOKS:
+            if hasattr(self.policy, attr):
+                setattr(self.policy, attr, getattr(self.backend, method))
 
     # ----------------------------------------------------------- events
     def subscribe(self, kind: str, fn: Callable[[CacheEvent], None]):
@@ -134,39 +160,62 @@ class SemanticCache:
         it is revalidated against residency and recomputed on staleness.
         """
         t0 = time.perf_counter()
-        t = self._tick(t)
-        if self.cfg.hit_mode == "content":
-            best_cid, best_sim = cid, float("nan")
-            hit_cid = cid if cid in self.store else -1
-        else:
-            if top1 is not None and (top1[0] < 0 or top1[0] in self.store):
-                best_cid, best_sim = top1
+        with self._lock:
+            t = self._tick(t)
+            if self.cfg.hit_mode == "content":
+                best_cid, best_sim = cid, float("nan")
+                hit_cid = cid if cid in self.store else -1
             else:
-                best_cid, best_sim = self.backend.top1(self.store, emb)
-            hit_cid = best_cid if best_sim >= self.cfg.tau_hit else -1
-        self.metrics.lookups += 1
-        if hit_cid >= 0:
-            self.metrics.hits += 1
-            self.policy.on_hit(hit_cid,
-                               self._request(hit_cid, emb, t, req), t)
-            self._emit("hit", hit_cid, t, best_sim,
-                       self.payloads.get(hit_cid))
-            result: CacheResult = CacheHit(cid=hit_cid, sim=best_sim,
-                                           payload=self.payloads.get(hit_cid),
-                                           t=t)
-        else:
-            self.metrics.misses += 1
-            self._emit("miss", cid, t, best_sim)
-            result = CacheMiss(best_cid=best_cid if np.isfinite(best_sim)
-                               else -1, best_sim=best_sim, t=t)
-        self.metrics.lookup_s += time.perf_counter() - t0
+                if top1 is not None and (top1[0] < 0 or top1[0] in self.store):
+                    best_cid, best_sim = top1
+                else:
+                    best_cid, best_sim = self.backend.top1(self.store, emb)
+                hit_cid = best_cid if best_sim >= self.cfg.tau_hit else -1
+            self.metrics.lookups += 1
+            if hit_cid >= 0:
+                self.metrics.hits += 1
+                self.policy.on_hit(hit_cid,
+                                   self._request(hit_cid, emb, t, req), t)
+                self._emit("hit", hit_cid, t, best_sim,
+                           self.payloads.get(hit_cid))
+                result: CacheResult = CacheHit(
+                    cid=hit_cid, sim=best_sim,
+                    payload=self.payloads.get(hit_cid), t=t)
+            else:
+                self.metrics.misses += 1
+                self._emit("miss", cid, t, best_sim)
+                result = CacheMiss(best_cid=best_cid if np.isfinite(best_sim)
+                                   else -1, best_sim=best_sim, t=t)
+            self.metrics.lookup_s += time.perf_counter() - t0
         return result
 
     def peek_batch(self, embs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Raw snapshot Top-1 over a (B, D) query block — one backend call,
         no policy/metrics side effects.  Sims are against the store as of
         this call; pair with ``lookup(..., top1=...)`` to apply results."""
-        return self.backend.top1_batch(self.store, np.asarray(embs))
+        with self._lock:
+            return self.backend.top1_batch(self.store, np.asarray(embs))
+
+    def peek_rows(self, embs: np.ndarray, cids: Sequence[int]
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Snapshot Top-1 restricted to the given resident ``cids``.
+
+        The incremental-rescan primitive: after a full ``peek_batch``, a
+        waiting queue only needs rescoring against entries admitted since
+        — and it must use the backend's own cosine scoring so the peeked
+        sims can never disagree with ``lookup`` near ``tau_hit``.
+        Non-resident cids are skipped; with none resident every query
+        reports ``(-1, -inf)``."""
+        embs = np.asarray(embs, dtype=np.float32)
+        with self._lock:
+            rows = [self.store.slot_of[c] for c in dict.fromkeys(cids)
+                    if c in self.store]
+            if not rows:
+                b = embs.shape[0]
+                return (np.full(b, -1, dtype=np.int64),
+                        np.full(b, -np.inf, dtype=np.float64))
+            return self.backend.top1_rows(self.store, embs,
+                                          np.asarray(rows, dtype=np.int64))
 
     def lookup_batch(self, embs: Sequence[np.ndarray] | np.ndarray, *,
                      cids: Optional[Sequence[int]] = None,
@@ -204,35 +253,95 @@ class SemanticCache:
 
         Already-resident cids only refresh their payload (the historical
         semantic-mode behavior: a miss whose content is resident — a
-        paraphrase below tau_hit — does not reinsert)."""
+        paraphrase below tau_hit — does not reinsert).
+
+        With ``cfg.async_admit`` the admission is queued (logical time is
+        assigned now, so ordering is deterministic) and the returned list
+        is empty — evictions surface through the ``"evict"`` hook and
+        :meth:`flush`."""
+        if self.admitter is not None:
+            # tick + enqueue under one lock: concurrent producers must not
+            # queue out of timestamp order, or the FIFO drain would apply
+            # decreasing times and diverge from the synchronous path
+            with self._lock:
+                t = self._tick(t)
+                self.admitter.submit(cid, emb, payload, t, req)
+            return []
+        return self._admit_now(cid, emb, payload, t, req)
+
+    def _admit_now(self, cid: int, emb: np.ndarray, payload: Any,
+                   t: Optional[int], req: Optional[Request]) -> list[int]:
+        """The synchronous insert-then-evict body (also the admitter's
+        drain target)."""
         t0 = time.perf_counter()
-        t = self._tick(t)
-        if payload is not None:
-            self.payloads[cid] = payload
         evicted: list[int] = []
-        if self.cfg.capacity <= 0 or cid in self.store:
+        with self._lock:
+            t = self._tick(t)
+            if self.cfg.capacity <= 0:
+                # nothing can ever be inserted: storing the payload would
+                # leak it forever (eviction is the only payload-drop path)
+                self.metrics.admit_s += time.perf_counter() - t0
+                return evicted
+            if payload is not None:
+                self.payloads[cid] = payload
+            if cid in self.store:
+                self.metrics.admit_s += time.perf_counter() - t0
+                return evicted
+            self.store.insert(cid, emb)
+            self.policy.on_admit(cid, self._request(cid, emb, t, req), t)
+            self.metrics.admissions += 1
+            self._emit("admit", cid, t, payload=payload)
+            while len(self.store) > self.cfg.capacity:
+                victim = self.policy.victim(t)
+                self.store.remove(victim)
+                vp = self.payloads.pop(victim, None)
+                self.metrics.evictions += 1
+                evicted.append(victim)
+                self._emit("evict", victim, t, payload=vp)
             self.metrics.admit_s += time.perf_counter() - t0
-            return evicted
-        self.store.insert(cid, emb)
-        self.policy.on_admit(cid, self._request(cid, emb, t, req), t)
-        self.metrics.admissions += 1
-        self._emit("admit", cid, t, payload=payload)
-        while len(self.store) > self.cfg.capacity:
-            victim = self.policy.victim(t)
-            self.store.remove(victim)
-            vp = self.payloads.pop(victim, None)
-            self.metrics.evictions += 1
-            evicted.append(victim)
-            self._emit("evict", victim, t, payload=vp)
-        self.metrics.admit_s += time.perf_counter() - t0
         return evicted
+
+    # ------------------------------------------------- async admission
+    @property
+    def pending_admits(self) -> int:
+        """Queued-but-unapplied admissions (0 in synchronous mode)."""
+        return 0 if self.admitter is None else len(self.admitter)
+
+    @property
+    def admit_stall_s(self) -> float:
+        """Producer-visible admission stall: in synchronous mode the full
+        insert+evict cost; in async mode just enqueue + flush waits."""
+        if self.admitter is None:
+            return self.metrics.admit_s
+        return self.admitter.stall_s
+
+    def flush(self) -> list[int]:
+        """Apply all queued admissions (no-op when synchronous); returns
+        the cids evicted by the drain since the last flush."""
+        if self.admitter is None:
+            return []
+        return self.admitter.flush()
+
+    drain = flush
+
+    def close(self):
+        """Stop the background admission worker (flushes first) and
+        revert to inline admission — the cache stays fully usable, later
+        ``admit`` calls just pay the insert+evict cost synchronously."""
+        if self.admitter is not None:
+            self.admitter.close()
+            self.admitter = None
 
     def admit_batch(self, cids: Sequence[int],
                     embs: Sequence[np.ndarray] | np.ndarray,
                     payloads: Optional[Sequence[Any]] = None, *,
                     ts: Optional[Sequence[int]] = None,
                     reqs: Optional[Sequence[Request]] = None) -> list[int]:
-        """Admit a block of entries; returns all evicted cids in order."""
+        """Admit a block of entries; returns all evicted cids in order.
+
+        With ``cfg.async_admit`` the block is queued and the returned list
+        is empty — collect victims from :meth:`flush` or the ``"evict"``
+        hook instead."""
         evicted: list[int] = []
         for i, cid in enumerate(cids):
             evicted += self.admit(
@@ -245,17 +354,25 @@ class SemanticCache:
     # ------------------------------------------------- checkpoint/restore
     def checkpoint(self) -> dict:
         """Deep snapshot of all mutable state (store, policy, payloads,
-        clock, metrics).  Store/policy are copied together so the policy's
-        internal store reference stays shared inside the snapshot."""
-        state = copy.deepcopy({k: getattr(self, k) for k in _MUTABLE_STATE})
+        clock, metrics).  Queued async admissions are flushed first so the
+        snapshot is a settled state.  Store/policy are copied together so
+        the policy's internal store reference stays shared inside the
+        snapshot."""
+        self.flush()
+        with self._lock:
+            state = copy.deepcopy({k: getattr(self, k)
+                                   for k in _MUTABLE_STATE})
         state["_version"] = 1
         return state
 
     def restore(self, state: dict):
         """Restore a :meth:`checkpoint` snapshot (the snapshot itself is
-        copied, so one checkpoint can be restored multiple times)."""
+        copied, so one checkpoint can be restored multiple times).  Queued
+        async admissions are applied to the *old* state first, then
+        discarded with it."""
+        self.flush()
         restored = copy.deepcopy({k: state[k] for k in _MUTABLE_STATE})
-        for k in _MUTABLE_STATE:
-            setattr(self, k, restored[k])
-        if hasattr(self.policy, "value_backend"):
-            self.policy.value_backend = self.backend.rac_value
+        with self._lock:
+            for k in _MUTABLE_STATE:
+                setattr(self, k, restored[k])
+            self._wire_value_backend()

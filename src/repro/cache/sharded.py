@@ -112,6 +112,10 @@ class ShardedKernelBackend:
         self._lookup_fn = None
         self._rac_fns: dict[float, object] = {}
         self._slab_cache: dict[int, tuple] = {}    # store.version -> (slab, nv)
+        self._scatter_fn = None                    # dirty-row device update
+        # observability for the incremental path: full uploads vs dirty-row
+        # scatters, and how many rows the scatters moved in total
+        self.sync_stats = {"full": 0, "incremental": 0, "rows": 0}
 
     # ------------------------------------------------------------- topology
     @property
@@ -134,6 +138,16 @@ class ShardedKernelBackend:
         return self._mesh
 
     # ---------------------------------------------------------- device slab
+    def _build_scatter(self):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = NamedSharding(self._mesh, P("cache"))
+
+        def scatter(slab, shards, locals_, vals):
+            return slab.at[shards, locals_].set(vals)
+
+        return jax.jit(scatter, out_shardings=spec)
+
     def _slab(self, store: ShardedStore):
         """(S, R, D) slab + per-shard valid counts, cached by store version.
 
@@ -141,6 +155,12 @@ class ShardedKernelBackend:
         restored from this store lineage re-attaches to its uploaded slab;
         any divergent mutation forces a fresh upload.  (Host fallback keeps
         a zero-copy numpy view, so the cache is free there.)
+
+        On a version miss the backend first asks the store which rows
+        changed since a cached snapshot (:meth:`ResidentStore.dirty_since`)
+        and, when the answer is small, scatters only those rows into the
+        device slab instead of re-uploading the whole thing — admission-
+        heavy replay moves O(mutations) rows per sync, not O(capacity).
         """
         if self.mesh() is None:
             # host fallback: the live zero-copy view is always current —
@@ -152,12 +172,47 @@ class ShardedKernelBackend:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         spec = NamedSharding(self._mesh, P("cache"))
-        slab = jax.device_put(np.ascontiguousarray(store.shard_view()), spec)
         nv = jax.device_put(store.local_hwm.astype(np.int32), spec)
+        slab = self._incremental_slab(store, spec)
+        if slab is None:
+            self.sync_stats["full"] += 1
+            slab = jax.device_put(np.ascontiguousarray(store.shard_view()),
+                                  spec)
         if len(self._slab_cache) >= 4:              # keep a few snapshots
             self._slab_cache.pop(next(iter(self._slab_cache)))
         self._slab_cache[store.version] = (slab, nv)
         return slab, nv
+
+    def _incremental_slab(self, store: ShardedStore, spec):
+        """Dirty-row DMA: patch the freshest reusable cached slab, or None
+        when no cached version of this lineage can answer (→ full upload)."""
+        best = None
+        for version, (slab, _) in self._slab_cache.items():
+            dirty = store.dirty_since(version)
+            if dirty is not None and (best is None or len(dirty) < len(best[0])):
+                best = (dirty, slab)
+        if best is None:
+            return None
+        dirty, slab = best
+        if len(dirty) > max(64, store.emb.shape[0] // 4):
+            return None                  # not worth a scatter: bulk upload
+        if not dirty:
+            return slab
+        slots = np.fromiter(sorted(dirty), dtype=np.int64, count=len(dirty))
+        # pad to a bucket of 64 by repeating the last dirty slot (writing
+        # the same row/value twice is a no-op under .set) so XLA compiles
+        # one scatter per bucket, not one per distinct dirty count
+        pad = (-len(slots)) % 64
+        if pad:
+            slots = np.pad(slots, (0, pad), mode="edge")
+        if self._scatter_fn is None:
+            self._scatter_fn = self._build_scatter()
+        self.sync_stats["incremental"] += 1
+        self.sync_stats["rows"] += len(dirty)
+        return self._scatter_fn(slab,
+                                (slots // store.rows_per_shard).astype(np.int32),
+                                (slots % store.rows_per_shard).astype(np.int32),
+                                store.emb[slots])
 
     # -------------------------------------------------------------- lookup
     def _build_lookup(self):
@@ -228,6 +283,15 @@ class ShardedKernelBackend:
         sims = np.where(cids >= 0, vals, -np.inf)
         return cids, sims
 
+    def top1_rows(self, store: ShardedStore, queries: np.ndarray,
+                  rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        # a row-restricted rescan touches a handful of rows — one gathered
+        # single-device kernel call (KernelBackend's path, which only needs
+        # q_pad/use_pallas/interpret) beats fanning a tiny candidate block
+        # across the mesh
+        from .backends import KernelBackend
+        return KernelBackend.top1_rows(self, store, queries, rows)
+
     # ------------------------------------------------------------- eviction
     def _build_rac(self, alpha: float):
         import jax
@@ -274,3 +338,8 @@ class ShardedKernelBackend:
         out = fn(np.pad(tsi, (0, pad)), np.pad(tids, (0, pad)),
                  tp_last, t_rel)
         return np.asarray(out[:n], dtype=np.float64)
+
+    def rac_value_masked(self, tsi, tids, tp_last, t_last, alpha, t_now,
+                         valid):
+        vals = self.rac_value(tsi, tids, tp_last, t_last, alpha, t_now)
+        return np.where(np.asarray(valid, dtype=bool), vals, np.inf)

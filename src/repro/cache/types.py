@@ -25,6 +25,13 @@ class CacheConfig:
     across the devices of a 1-D cache mesh with a shard_map Top-1 merge);
     all produce identical hit decisions.  ``backend_kwargs`` are forwarded
     to the backend constructor (e.g. ``{"n_shards": 4}`` for ``"sharded"``).
+
+    ``async_admit`` decouples admission from the request path: ``False``
+    (default) applies insert + eviction scoring inline; ``True`` queues
+    admissions for a background worker and ``flush()`` settles them at
+    batch boundaries; ``"sync"`` queues without a worker — the queue only
+    drains inside ``flush()``/``drain()``, the deterministic replay-parity
+    mode.  After a flush all three produce identical state.
     """
 
     capacity: int
@@ -32,10 +39,11 @@ class CacheConfig:
     tau_hit: float = 0.85
     hit_mode: str = "semantic"           # "semantic" | "content"
     backend: str = "numpy"               # "numpy" | "kernel" | "sharded"
-    policy: str = "RAC"                  # name in BASELINES or "RAC"
+    policy: str = "RAC"                  # BASELINES name, "RAC", "RadixRAC"
     policy_kwargs: dict = dataclasses.field(default_factory=dict)
     use_pallas: bool = True              # device backends: pallas vs jnp oracle
     backend_kwargs: dict = dataclasses.field(default_factory=dict)
+    async_admit: bool | str = False      # False | True (worker) | "sync"
 
 
 @dataclasses.dataclass

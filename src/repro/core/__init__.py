@@ -15,6 +15,7 @@ traces through that facade.
 from .embeddings import EmbeddingSpace, cosine
 from .policies import BASELINES, Policy
 from .rac import RAC_VARIANTS, RACPolicy, make_rac
+from .radix import RadixRACPolicy
 from .simulator import (default_factories, hr_full, run_many, run_policy,
                         run_policy_batched)
 from .store import ResidentStore
@@ -25,6 +26,7 @@ from .types import Request, Stats, Trace, summarize
 
 __all__ = [
     "EmbeddingSpace", "cosine", "BASELINES", "Policy", "RACPolicy",
+    "RadixRACPolicy",
     "RAC_VARIANTS", "make_rac", "run_policy", "run_policy_batched",
     "run_many",
     "default_factories", "hr_full", "ResidentStore", "pagerank_reversed",

@@ -1,0 +1,193 @@
+"""RadixRAC — RAC eviction for radix-structured KV prefix blocks.
+
+The paper's second instantiation (§2, Alg. 3) caches fixed-size KV prefix
+blocks in a radix tree: the parent edge IS the dependency link, and
+eviction under block pressure ranks blocks by Value = TP(topic)·TSI(block)
+with SGLang's children-first structural constraint.  This policy carries
+exactly that scoring under the generic :mod:`repro.core.policies`
+protocol, so :class:`repro.serving.kv_manager.KVBlockManager` can run on a
+content-mode :class:`repro.cache.SemanticCache` and share the facade's
+metrics, hooks, checkpoint, and device scoring surface with the
+query-level cache:
+
+  - the *manager* owns the tree (token keys, prefix matching) and tells
+    the policy about structure through :meth:`stage` (topic + parent of
+    the next admission) and :meth:`touch_topic` (one TP refresh per
+    request, Alg. 2);
+  - the *policy* owns per-slot scoring slabs (freq/dep/last_t/topic),
+    maintains the Alg. 3 TSI cascade on hits and new links, and elects
+    victims by ``argmin TP·TSI`` over blocks with no live children;
+  - victim scoring is one batched ``rac_value`` call — the facade wires
+    ``masked_value_backend`` to the backend's :meth:`rac_value_masked`,
+    so the host numpy path and the device kernel path both score the
+    whole block table with structurally-protected blocks masked to +inf.
+
+Self-eviction: when every block is structurally protected (all have live
+children, or are the chain currently being extended), the freshly
+admitted block itself is elected — the facade's always-admit protocol
+turns that into "allocation failed", matching the legacy manager's
+``victim < 0`` path, and the staged parent link is rolled back.
+
+Determinism matches the legacy host manager bit for bit on the numpy
+backend: values are float64, ties break on (value, last-access, cid).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .policies import Policy
+
+
+class RadixRACPolicy(Policy):
+    name = "RadixRAC"
+
+    def __init__(self, capacity, store=None, *,
+                 alpha: float = 0.001,         # TP decay coefficient (Def. 1)
+                 lam: float = 2.0,             # structural weight λ (Def. 2)
+                 **kw):
+        super().__init__(capacity, store)
+        assert store is not None, "RadixRAC scores over the resident store"
+        self.alpha = alpha
+        self.lam = lam
+        n = store.emb.shape[0]
+        # per-slot scoring slabs (aligned with store slots)
+        self.freq = np.zeros(n, dtype=np.float64)
+        self.dep = np.zeros(n, dtype=np.float64)
+        self.last_t = np.full(n, -1, dtype=np.int64)
+        self.topic_of = np.full(n, -1, dtype=np.int64)
+        self.parent = np.full(n, -1, dtype=np.int64)     # parent cid (-1 root)
+        self.n_children = np.zeros(n, dtype=np.int64)    # live children count
+        # topic TP tables (grown dynamically), indexed by tid
+        self.tp_last = np.zeros(256, dtype=np.float64)
+        self.t_last = np.zeros(256, dtype=np.int64)
+        self._next_tid = 0
+        # admission staging (set by the manager before each cache.admit)
+        self._staged: tuple[int, int] | None = None      # (topic, parent)
+        self._fresh = -1                  # last admitted cid (self-evict target)
+        self.protect: set[int] = set()    # chain tip being extended
+        # facade-wired device scorers (see repro.cache.facade._VALUE_HOOKS)
+        self.value_backend = None
+        self.masked_value_backend = None
+
+    # ------------------------------------------------------------------ TP
+    def _grow_tp(self, tid: int):
+        while tid >= len(self.tp_last):
+            self.tp_last = np.concatenate([self.tp_last,
+                                           np.zeros_like(self.tp_last)])
+            self.t_last = np.concatenate([self.t_last,
+                                          np.zeros_like(self.t_last)])
+
+    def touch_topic(self, tid: int | None, t: int) -> int:
+        """Alg. 2 decay-and-increment; ``tid=None`` opens a fresh topic.
+        Called once per request by the block manager (a conversation is a
+        topic episode — every request touches exactly one topic)."""
+        if tid is None:
+            tid = self._next_tid
+        self._grow_tp(tid)
+        self._next_tid = max(self._next_tid, tid + 1)
+        self.tp_last[tid] = (0.5 ** (self.alpha * (t - self.t_last[tid]))
+                             * self.tp_last[tid] + 1.0)
+        self.t_last[tid] = t
+        return tid
+
+    def tp_now(self, tid: int, t: int) -> float:
+        return float(0.5 ** (self.alpha * (t - self.t_last[tid]))
+                     * self.tp_last[tid])
+
+    # ------------------------------------------------------------ protocol
+    def stage(self, topic: int, parent: int):
+        """Declare the structure of the next admission: its topic and its
+        radix parent (-1 for a root).  The parent is also the chain tip
+        currently being extended, so it joins the protected set."""
+        self._staged = (topic, parent)
+        self.protect = {parent} if parent >= 0 else set()
+
+    def on_hit(self, cid, req, t):
+        """Alg. 3 hit path: freq bump + one-hop dep cascade to the radix
+        parent (the radix edge is the dependency link, no DetectParent)."""
+        s = self.store.slot_of[cid]
+        self.freq[s] += 1.0
+        self.last_t[s] = t
+        p = int(self.parent[s])
+        if p >= 0 and p in self.store.slot_of:
+            self.dep[self.store.slot_of[p]] += 1.0
+
+    def on_admit(self, cid, req, t):
+        assert self._staged is not None, \
+            "RadixRAC admissions must be staged (topic, parent) first"
+        topic, parent = self._staged
+        self._staged = None
+        self._fresh = cid
+        s = self.store.slot_of[cid]
+        self.freq[s] = 1.0
+        self.dep[s] = 0.0
+        self.last_t[s] = t
+        self.topic_of[s] = topic
+        self.parent[s] = parent
+        if parent >= 0 and parent in self.store.slot_of:
+            sp = self.store.slot_of[parent]
+            self.n_children[sp] += 1
+            self.dep[sp] += 1.0           # new link (Alg. 3 new=1 path)
+
+    # ------------------------------------------------------------- eviction
+    def value_scores(self, t: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched masked Value(q) over all resident blocks: (cids, values,
+        valid).  Invalid (structurally protected) blocks score +inf."""
+        slots = np.fromiter(self.store.slot_of.values(), dtype=np.int64,
+                            count=len(self.store.slot_of))
+        cids = np.fromiter(self.store.slot_of.keys(), dtype=np.int64,
+                           count=len(self.store.slot_of))
+        tids = self.topic_of[slots]
+        tsi = self.freq[slots] + self.lam * self.dep[slots]
+        valid = self.n_children[slots] == 0
+        if self.protect or self._fresh >= 0:
+            blocked = self.protect | {self._fresh}
+            valid &= np.fromiter((int(c) not in blocked for c in cids),
+                                 dtype=bool, count=len(cids))
+        if self.masked_value_backend is not None:
+            values = self.masked_value_backend(tsi, tids, self.tp_last,
+                                               self.t_last, self.alpha, t,
+                                               valid)
+        else:
+            tp = (0.5 ** (self.alpha * (t - self.t_last[tids]))
+                  * self.tp_last[tids])
+            values = np.where(valid, tp * tsi, np.inf)
+        return cids, values, valid
+
+    def victim(self, t):
+        cids, values, valid = self.value_scores(t)
+        if not valid.any():
+            # everything is structurally protected: elect the fresh block
+            # itself (always-admit admission control — the manager reads
+            # this as "allocation failed", like the legacy victim<0 path)
+            victim = self._fresh
+            self._unlink_fresh()
+        else:
+            slots = np.array([self.store.slot_of[int(c)] for c in cids])
+            order = np.lexsort((cids, self.last_t[slots], values))
+            victim = int(cids[order[0]])
+        self._forget(victim)
+        return victim
+
+    def _unlink_fresh(self):
+        """Roll back the staged parent link of a failed admission so the
+        parent's dep/children match the legacy never-inserted state."""
+        s = self.store.slot_of[self._fresh]
+        p = int(self.parent[s])
+        if p >= 0 and p in self.store.slot_of:
+            sp = self.store.slot_of[p]
+            self.n_children[sp] -= 1
+            self.dep[sp] -= 1.0
+
+    def _forget(self, cid: int):
+        s = self.store.slot_of[cid]
+        p = int(self.parent[s])
+        if p >= 0 and cid != self._fresh and p in self.store.slot_of:
+            self.n_children[self.store.slot_of[p]] -= 1
+        self.freq[s] = 0.0
+        self.dep[s] = 0.0                 # dep(parent) survives (Def. 2)
+        self.last_t[s] = -1
+        self.topic_of[s] = -1
+        self.parent[s] = -1
+        if cid == self._fresh:
+            self._fresh = -1

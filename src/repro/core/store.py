@@ -17,15 +17,21 @@ to route new entries onto the least-loaded shard of a row-partitioned slab.
 ``version`` is a globally-unique mutation stamp: two store objects carry
 the same version only if their slabs are identical (deep copies that have
 not diverged), which lets device backends cache an uploaded slab keyed by
-version alone.
+version alone.  A bounded per-store mutation journal records which slot
+each stamp touched, so a device backend holding a slab uploaded at an
+older version of *this* store lineage can ask :meth:`dirty_since` for the
+exact row set to DMA instead of re-uploading the whole slab.
 """
 from __future__ import annotations
 
 import itertools
+from collections import deque
 
 import numpy as np
 
 _STAMP = itertools.count(1)     # global mutation stamps (see class docstring)
+
+_JOURNAL_LEN = 4096             # mutations remembered for dirty-row sync
 
 
 class ResidentStore:
@@ -41,6 +47,40 @@ class ResidentStore:
         self._free: list[int] = list(range(n - 1, -1, -1))
         self.hwm = 0                           # all occupied slots < hwm
         self.version = next(_STAMP)
+        # (version, slot) pairs, version-ascending; deepcopied with the
+        # store, so a restored checkpoint keeps its own lineage's history.
+        # _journal_base is the version the slab held just before the oldest
+        # journal entry — the earliest version dirty_since can answer for.
+        self._journal: deque[tuple[int, int]] = deque()
+        self._journal_base = self.version
+
+    def _stamp(self, slot: int):
+        self.version = next(_STAMP)
+        self._journal.append((self.version, slot))
+        while len(self._journal) > _JOURNAL_LEN:
+            self._journal_base = self._journal.popleft()[0]
+
+    def dirty_since(self, version: int) -> set[int] | None:
+        """Slots mutated after ``version``, or None if unanswerable.
+
+        ``version`` must be a stamp this exact store lineage has held and
+        that is still covered by the journal; stamps are globally unique,
+        so a diverged copy's stamp can never be mistaken for ours.
+        """
+        if version == self.version:
+            return set()
+        if version < self._journal_base:
+            return None                        # aged out (or foreign lineage)
+        known = version == self._journal_base
+        dirty: set[int] = set()
+        for v, slot in self._journal:
+            if v <= version:
+                known = known or v == version
+                continue
+            if not known:
+                return None      # ``version`` was never a stamp of this store
+            dirty.add(slot)
+        return dirty if known else None
 
     def __len__(self) -> int:
         return len(self.slot_of)
@@ -66,7 +106,7 @@ class ResidentStore:
         self.cid[slot] = cid
         self.slot_of[cid] = slot
         self.hwm = max(self.hwm, slot + 1)
-        self.version = next(_STAMP)
+        self._stamp(slot)
         return slot
 
     def remove(self, cid: int) -> int:
@@ -77,7 +117,7 @@ class ResidentStore:
         # slab, and a zero embedding can never clear tau_hit > 0
         self.emb[slot] = 0.0
         self._release(slot)
-        self.version = next(_STAMP)
+        self._stamp(slot)
         return slot
 
     # -- semantic hit determination (identical for every policy) -----------

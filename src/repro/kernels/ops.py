@@ -119,3 +119,20 @@ def rac_value(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
     """RAC Eq.1 scoring over the resident table."""
     return rac_value_raw(tsi, tid, tp_last, t_last, alpha, t_now,
                          use_pallas=use_pallas, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "t_now", "use_pallas",
+                                             "interpret"))
+def rac_value_masked(tsi, tid, tp_last, t_last, valid, alpha: float,
+                     t_now: int, *, use_pallas: bool = True,
+                     interpret: bool | None = None):
+    """RAC Eq.1 over a block table with a structural-validity mask.
+
+    ``valid`` (bool, same shape as ``tsi``) marks entries that are legal
+    eviction victims; invalid rows (e.g. radix blocks with live children,
+    or the chain tip currently being extended) score ``+inf`` so a
+    min-value victim scan can never elect them.  One fused jit: the Eq.1
+    kernel plus the mask select, no host round-trip between them."""
+    vals = rac_value_raw(tsi, tid, tp_last, t_last, alpha, t_now,
+                         use_pallas=use_pallas, interpret=interpret)
+    return jnp.where(valid, vals, jnp.inf)

@@ -1,4 +1,31 @@
-from .engine import EngineConfig, ServingEngine
-from .kv_manager import KVBlockManager
+"""Event-driven serving stack: both RAC instantiations behind one facade.
 
-__all__ = ["EngineConfig", "ServingEngine", "KVBlockManager"]
+The paper's two deployments of relation-aware caching are served here,
+and BOTH route every cache decision through
+:class:`repro.cache.SemanticCache` — the facade is the single owner of
+lookup, admission, and eviction in the repo:
+
+  - **Query-level response cache** — :class:`ServingEngine` runs
+    continuous batching with a semantic-mode facade in front: the waiting
+    queue is scored in one batched peek, incremental rescans go through a
+    row-restricted backend peek, and completed responses are *queued* for
+    admission (``EngineConfig.async_admit``) so generation slots never
+    block on eviction scoring; the queue is flushed at batch boundaries
+    with outputs identical to synchronous admission.
+  - **KV prefix-block cache** — :class:`KVBlockManager` keeps the radix
+    tree (SGLang-style compositional prefix reuse) but delegates
+    residency, Alg. 3 TSI bookkeeping, and batched TP·TSI victim scoring
+    to a content-mode facade running
+    :class:`repro.core.radix.RadixRACPolicy`; children-first structural
+    validity is a hard mask in the backend's ``rac_value_masked`` scan.
+
+Block eviction and response eviction therefore share one metrics, hook,
+checkpoint, and device-scoring surface.  :class:`LegacyKVBlockManager`
+is the pre-facade host implementation, kept as the decision-parity
+oracle.
+"""
+from .engine import EngineConfig, ServingEngine
+from .kv_manager import KVBlockManager, LegacyKVBlockManager
+
+__all__ = ["EngineConfig", "ServingEngine", "KVBlockManager",
+           "LegacyKVBlockManager"]

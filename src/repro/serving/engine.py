@@ -14,6 +14,14 @@ Request path (the paper's semantic-cache setting, §2):
      response payloads itself — the engine only observes via the
      ``"evict"`` event hook.
 
+Event-driven admission: with ``EngineConfig.async_admit`` the cache runs
+in ``async_admit`` mode — a completed slot only *enqueues* its admission
+(generation never blocks on eviction scoring) and the engine settles the
+queue with one ``flush()`` at batch boundaries, just before the waiting
+queue is rescored.  Request outputs (tokens, hit flags) are identical to
+the synchronous path; the admit stall moves off the slot loop
+(``benchmarks/serving_async_bench.py`` measures the difference).
+
 The KV-prefix instantiation rides underneath via
 :class:`repro.serving.kv_manager.KVBlockManager` for multi-turn requests.
 """
@@ -43,6 +51,7 @@ class EngineConfig:
     cache_backend: str = "numpy"  # "numpy" | "kernel" | "sharded"
                                   # (device sim_top1; sharded = multi-device
                                   #  slab, see repro/cache/sharded.py)
+    async_admit: bool = False     # queue admissions, flush at batch bounds
 
 
 @dataclasses.dataclass
@@ -71,7 +80,8 @@ class ServingEngine:
             capacity=ecfg.cache_capacity, dim=ecfg.emb_dim,
             tau_hit=ecfg.tau_hit, hit_mode="semantic",
             backend=ecfg.cache_backend, policy="RAC",
-            policy_kwargs=policy_kwargs or {}))
+            policy_kwargs=policy_kwargs or {},
+            async_admit=ecfg.async_admit))
         self._gen = {"generated_tokens": 0, "batches": 0,
                      "evicted_responses": 0}
         self.cache.subscribe("evict", self._on_evict)
@@ -84,6 +94,11 @@ class ServingEngine:
         # only observes (metrics / future writeback)
         if ev.payload is not None:
             self._gen["evicted_responses"] += 1
+
+    def close(self):
+        """Release engine-owned resources (stops the async admission
+        worker after flushing it; a no-op in blocking mode)."""
+        self.cache.close()
 
     # legacy attribute surface (tests, examples, notebooks) --------------
     @property
@@ -102,7 +117,8 @@ class ServingEngine:
     def stats(self) -> dict:
         m = self.cache.metrics
         return {**self._gen, "hits": m.hits, "misses": m.misses,
-                "evictions": m.evictions}
+                "evictions": m.evictions,
+                "admit_stall_s": self.cache.admit_stall_s}
 
     # -- continuous batching -------------------------------------------
     def run(self, requests: list[tuple[int, np.ndarray, list]]) -> list[RequestState]:
@@ -148,6 +164,11 @@ class ServingEngine:
             queue[:] = waiting
 
         def try_fill():
+            # batch boundary: settle queued admissions before any hit
+            # determination, so async and synchronous admission see the
+            # same store state at every lookup (identical outputs)
+            if queue:
+                self.cache.flush()
             # batched hit determination: the full queue is scored in ONE
             # facade call at first entry; afterwards each waiting request
             # only scores against entries admitted since the last pass
@@ -164,19 +185,17 @@ class ServingEngine:
                 recent.clear()
                 drain_hits()
             elif queue and recent:
-                rows = [self.cache.store.slot_of[c] for c in set(recent)
-                        if c in self.cache.store]
+                # row-restricted peek THROUGH the backend: the rescan uses
+                # the same cosine scoring as the full peek, so peeked sims
+                # and backend sims cannot disagree near tau_hit
+                fresh = list(dict.fromkeys(recent))
                 recent.clear()
-                if rows:
-                    live = self.cache.store.cid[rows]
-                    sims = np.stack([r.emb for r in queue]) \
-                        @ self.cache.store.emb[rows].T
-                    best = np.argmax(sims, axis=1)
-                    for row, req in enumerate(queue):
-                        s = float(sims[row, best[row]])
-                        if s > peeked[req.rid][1]:
-                            peeked[req.rid] = (int(live[best[row]]), s)
-                    drain_hits()
+                cids, sims = self.cache.peek_rows(
+                    np.stack([r.emb for r in queue]), fresh)
+                for i, req in enumerate(queue):
+                    if sims[i] > peeked[req.rid][1]:
+                        peeked[req.rid] = (int(cids[i]), float(sims[i]))
+                drain_hits()
             while queue:
                 free = [i for i, s in enumerate(slots) if s is None]
                 if not free:
@@ -224,4 +243,5 @@ class ServingEngine:
                 else:
                     cur[i] = tok
             try_fill()
+        self.cache.flush()           # settle admissions queued in the tail
         return sorted(done, key=lambda r: r.rid)

@@ -1,0 +1,254 @@
+"""Event-driven admission: flush determinism vs synchronous admit, the
+payload-leak fix, the row-restricted peek, and the dirty-row store
+journal behind the sharded backend's incremental slab sync."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cache import (CacheConfig, KernelBackend, NumpyBackend,
+                         SemanticCache)
+from repro.core import EmbeddingSpace
+from repro.core.store import ResidentStore
+
+
+def _drive(mode, *, capacity=16, dim=32, batch=5):
+    """One fixed replay script in the engine's batch-boundary discipline:
+    a batch of lookups, then the misses' admissions, then a flush — so
+    every lookup sees a settled store in all three admission modes."""
+    space = EmbeddingSpace(dim=dim, seed=2)
+    cache = SemanticCache(CacheConfig(capacity=capacity, dim=dim,
+                                      policy="RAC", async_admit=mode))
+    events = []
+    for kind in ("hit", "miss", "admit", "evict"):
+        cache.subscribe(kind, lambda ev, k=kind: events.append((k, ev.cid)))
+    reqs = [(i, space.content_embedding(i % 6, i // 6).astype(np.float32)
+             if i < 30 else
+             space.paraphrase(space.content_embedding(i % 6, (i - 30) // 6)
+                              .astype(np.float32), i % 6, (i - 30) // 6, 1)
+             .astype(np.float32))
+            for i in range(60)]
+    for start in range(0, len(reqs), batch):
+        chunk = reqs[start:start + batch]
+        missed = [(cid, emb) for cid, emb in chunk
+                  if not cache.lookup(emb, cid=cid).hit]
+        for cid, emb in missed:
+            cache.admit(cid, emb, payload=[cid])
+        cache.flush()
+    cache.close()
+    counters = {k: v for k, v in cache.metrics.snapshot().items()
+                if not k.endswith("_s")}
+    return cache, counters, events
+
+
+def test_flush_matches_synchronous_admit():
+    """The determinism criterion: after flush(), store, payloads, metrics
+    counters, clock, and the admit/evict decision sequence are identical
+    across inline, queued-deterministic ('sync'), and background-worker
+    modes."""
+    ref_cache, ref_counters, ref_events = _drive(False)
+    ref_admits = [e for e in ref_events if e[0] in ("admit", "evict")]
+    for mode in ("sync", True):
+        cache, counters, events = _drive(mode)
+        assert sorted(cache.store.keys()) == sorted(ref_cache.store.keys())
+        assert cache.payloads == ref_cache.payloads
+        assert counters == ref_counters
+        assert cache.clock == ref_cache.clock
+        # admissions and eviction victims happen in the same order (only
+        # their interleaving with lookups moves — that's the async point)
+        assert [e for e in events if e[0] in ("admit", "evict")] == ref_admits
+
+
+def test_async_admit_defers_until_flush():
+    space = EmbeddingSpace(dim=16, seed=3)
+    cache = SemanticCache(CacheConfig(capacity=4, dim=16, policy="LRU",
+                                      async_admit="sync"))
+    e = space.content_embedding(0, 0).astype(np.float32)
+    assert cache.admit(0, e, payload="r") == []
+    assert cache.pending_admits == 1 and len(cache) == 0
+    evicted = cache.flush()
+    assert evicted == [] and len(cache) == 1 and cache.pending_admits == 0
+    assert cache.lookup(e, cid=0).hit
+
+
+def test_flush_reports_drained_evictions():
+    rng = np.random.default_rng(4)
+    cache = SemanticCache(CacheConfig(capacity=2, dim=8, policy="FIFO",
+                                      async_admit="sync"))
+    embs = rng.standard_normal((4, 8)).astype(np.float32)
+    for i in range(4):
+        cache.admit(i, embs[i])
+    assert cache.flush() == [0, 1]            # FIFO victims, in drain order
+
+
+def test_checkpoint_flushes_queued_admissions():
+    rng = np.random.default_rng(5)
+    cache = SemanticCache(CacheConfig(capacity=8, dim=8, policy="LRU",
+                                      async_admit="sync"))
+    cache.admit(7, rng.standard_normal(8).astype(np.float32), payload="x")
+    snap = cache.checkpoint()                  # settles the queue first
+    assert 7 in snap["store"].slot_of and snap["payloads"] == {7: "x"}
+    cache.restore(snap)
+    assert 7 in cache and cache.payloads == {7: "x"}
+
+
+def test_drain_error_surfaces_at_flush_and_worker_survives():
+    """An admission that would raise inline must raise at flush() — not
+    hang the flush wait or silently vanish — and the worker keeps
+    draining afterwards."""
+    cache = SemanticCache(CacheConfig(capacity=4, dim=8, policy="LRU",
+                                      async_admit=True))
+    cache.admit(1, np.ones(3, np.float32))      # wrong-shaped embedding
+    with pytest.raises(ValueError):
+        cache.flush()
+    cache.admit(2, np.ones(8, np.float32))
+    assert cache.flush() == []
+    assert 2 in cache and 1 not in cache
+    cache.close()
+
+
+def test_close_reverts_to_inline_admission():
+    """close() stops the worker but leaves the cache usable: later admits
+    apply synchronously instead of raising into the caller's loop."""
+    cache = SemanticCache(CacheConfig(capacity=4, dim=8, policy="LRU",
+                                      async_admit=True))
+    cache.admit(1, np.ones(8, np.float32))
+    cache.close()
+    assert 1 in cache and cache.admitter is None
+    assert cache.admit(2, np.full(8, 2, np.float32)) == []   # inline now
+    assert 2 in cache and cache.pending_admits == 0
+
+
+def test_capacity_zero_admit_never_leaks_payload():
+    """Regression: with capacity<=0 nothing is ever inserted, so the
+    payload must not be stored (eviction could never drop it)."""
+    cache = SemanticCache(CacheConfig(capacity=0, dim=8, policy="LRU"))
+    cache.admit(1, np.ones(8, np.float32), payload=list(range(1000)))
+    assert cache.payloads == {} and len(cache) == 0
+
+
+# ------------------------------------------------------- row-restricted peek
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+def test_peek_rows_matches_full_peek(backend):
+    """A rescan restricted to the full resident set must agree with
+    peek_batch exactly — same backend scoring, no host dot-product drift."""
+    space = EmbeddingSpace(dim=64, seed=6)
+    cache = SemanticCache(CacheConfig(capacity=40, dim=64, policy="LRU",
+                                      backend=backend, use_pallas=False))
+    embs = [space.content_embedding(i % 8, i).astype(np.float32)
+            for i in range(32)]
+    for i, e in enumerate(embs):
+        cache.admit(i, e)
+    queries = np.stack([space.paraphrase(embs[i], i % 8, i, 1)
+                        for i in range(12)]).astype(np.float32)
+    full_c, full_s = cache.peek_batch(queries)
+    sub_c, sub_s = cache.peek_rows(queries, list(range(32)))
+    np.testing.assert_array_equal(full_c, sub_c)
+    np.testing.assert_allclose(full_s, sub_s, atol=1e-5)
+    # restricted to a strict subset: results come only from that subset
+    some = [3, 17, 20]
+    c, s = cache.peek_rows(queries, some + [999])     # non-resident skipped
+    assert set(c.tolist()) <= set(some)
+    # empty/non-resident restriction: every query reports a hard miss
+    c, s = cache.peek_rows(queries, [999])
+    assert (c == -1).all() and (s == -np.inf).all()
+
+
+def test_peek_rows_kernel_matches_numpy():
+    space = EmbeddingSpace(dim=64, seed=7)
+    caches = {}
+    for backend in ("numpy", "kernel"):
+        cache = SemanticCache(CacheConfig(capacity=40, dim=64, policy="LRU",
+                                          backend=backend, use_pallas=False))
+        for i in range(24):
+            cache.admit(i, space.content_embedding(i % 5, i)
+                        .astype(np.float32))
+        caches[backend] = cache
+    queries = np.stack([space.content_embedding(j % 5, 100 + j)
+                        for j in range(9)]).astype(np.float32)
+    rows = [1, 4, 9, 16, 23]
+    nc, ns = caches["numpy"].peek_rows(queries, rows)
+    kc, ks = caches["kernel"].peek_rows(queries, rows)
+    np.testing.assert_array_equal(nc, kc)
+    np.testing.assert_allclose(ns, ks, atol=1e-5)
+
+
+# ------------------------------------------------------- dirty-row journal
+def test_dirty_since_semantics():
+    store = ResidentStore(8, 4)
+    v0 = store.version
+    assert store.dirty_since(v0) == set()
+    s1 = store.insert(1, np.ones(4, np.float32))
+    v1 = store.version
+    s2 = store.insert(2, np.full(4, 2, np.float32))
+    assert store.dirty_since(v0) == {s1, s2}
+    assert store.dirty_since(v1) == {s2}
+    assert store.dirty_since(store.version) == set()
+    # a stamp this store never held (e.g. a diverged copy's) is refused
+    assert store.dirty_since(store.version + 1) is None
+    assert store.dirty_since(v0 - 1) is None
+    # remove() journals too
+    store.remove(1)
+    assert store.dirty_since(v1) == {s1, s2}
+
+
+def test_dirty_since_diverged_copy_refused():
+    import copy
+    store = ResidentStore(8, 4)
+    store.insert(1, np.ones(4, np.float32))
+    twin = copy.deepcopy(store)
+    store.insert(2, np.full(4, 2, np.float32))   # diverge original
+    twin.insert(3, np.full(4, 3, np.float32))    # diverge copy
+    assert twin.dirty_since(store.version) is None
+    assert store.dirty_since(twin.version) is None
+
+
+def test_sharded_incremental_sync_in_subprocess():
+    """Mesh path: after the first full upload, small mutations reach the
+    device slab via a dirty-row scatter — and lookups stay bit-identical
+    to the numpy backend."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4").strip()
+import numpy as np
+from repro.cache import NumpyBackend, ShardedKernelBackend, ShardedStore
+rng = np.random.default_rng(2)
+store = ShardedStore(300, 64, n_shards=4)
+embs = rng.standard_normal((240, 64)).astype(np.float32)
+embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+for i in range(200):
+    store.insert(i, embs[i])
+q = rng.standard_normal((32, 64)).astype(np.float32)
+q /= np.linalg.norm(q, axis=1, keepdims=True)
+sb = ShardedKernelBackend(n_shards=4, use_pallas=False)
+assert sb.mesh() is not None
+nb = NumpyBackend()
+def check():
+    nc, ns = nb.top1_batch(store, q)
+    sc, ss = sb.top1_batch(store, q)
+    np.testing.assert_array_equal(nc, sc)
+    np.testing.assert_allclose(ns, ss, atol=1e-5)
+check()
+assert sb.sync_stats["full"] == 1 and sb.sync_stats["incremental"] == 0
+store.remove(7)
+store.insert(201, embs[201])
+check()                                   # 2 dirty rows -> scatter
+store.remove(90); store.remove(91); store.insert(202, embs[202])
+check()
+assert sb.sync_stats["full"] == 1, sb.sync_stats
+# slot reuse dedupes (remove+insert can hit the same row), so the scatter
+# moves between 1 row (all reused) and 5 (all distinct) across both syncs
+assert sb.sync_stats["incremental"] == 2, sb.sync_stats
+assert 2 <= sb.sync_stats["rows"] <= 5, sb.sync_stats
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

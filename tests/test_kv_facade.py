@@ -1,0 +1,148 @@
+"""Facade-routed KV-block manager vs the legacy host implementation:
+bit-identical hit/evict decisions on replayed token traces, structural
+radix validity under the masked device scoring path, and the shared
+facade metrics/hook surface."""
+import numpy as np
+import pytest
+
+from repro.cache import NumpyBackend
+from repro.core.radix import RadixRACPolicy
+from repro.serving import KVBlockManager, LegacyKVBlockManager
+
+
+def _token_trace(seed: int, n: int = 300) -> list[list[int]]:
+    """Mixed workload: hot shared prefixes, extensions, and one-offs."""
+    rng = np.random.default_rng(seed)
+    hot = [list(range(16)), list(range(700, 712))]
+    convs = []
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.25:        # reuse + extend a hot prefix
+            h = hot[int(rng.integers(0, len(hot)))]
+            convs.append(h + list(rng.integers(500, 600, size=int(rng.integers(0, 12)))))
+        elif r < 0.4:       # partial hot prefix
+            convs.append(hot[0][: 4 * int(rng.integers(1, 5))])
+        else:               # one-off conversation
+            base = 1000 + 40 * int(rng.integers(0, 60))
+            convs.append(list(range(base, base + int(rng.integers(3, 30)))))
+    return convs
+
+
+def _resident_chains(mgr) -> list[tuple]:
+    """Bid-independent residency fingerprint: every block's token chain."""
+    def chain(bid):
+        out = []
+        while bid >= 0:
+            b = mgr.blocks[bid]
+            out.append(b.tokens)
+            bid = b.parent
+        return tuple(reversed(out))
+    return sorted(chain(bid) for bid in mgr.blocks)
+
+
+@pytest.mark.parametrize("seed,n_blocks", [(0, 24), (1, 8), (2, 48), (3, 3)])
+def test_facade_manager_matches_legacy_decisions(seed, n_blocks):
+    """The acceptance criterion: identical hit tokens, allocations,
+    topics, and eviction outcomes per request across capacities (including
+    n_blocks=3, where chains outgrow the store and allocation must fail
+    exactly like the legacy victim<0 path)."""
+    new = KVBlockManager(n_blocks=n_blocks, block_tokens=4)
+    old = LegacyKVBlockManager(n_blocks=n_blocks, block_tokens=4)
+    for i, conv in enumerate(_token_trace(seed)):
+        rn = new.on_request(list(conv))
+        ro = old.on_request(list(conv))
+        assert rn["hit_tokens"] == ro["hit_tokens"], i
+        assert len(rn["new_blocks"]) == len(ro["new_blocks"]), i
+        assert rn["topic"] == ro["topic"], i
+        assert new.used == old.used, i
+        assert _resident_chains(new) == _resident_chains(old), i
+    assert new.used <= n_blocks
+
+
+def test_facade_manager_uses_facade_metrics_and_hooks():
+    """Block eviction shares the facade's metrics/hook surface with the
+    response cache: every block hit/miss/admit/evict is observable."""
+    mgr = KVBlockManager(n_blocks=8, block_tokens=4)
+    events = []
+    for kind in ("hit", "miss", "admit", "evict"):
+        mgr.cache.subscribe(kind, lambda ev, k=kind: events.append(k))
+    mgr.on_request(list(range(16)))           # 4 new blocks
+    mgr.on_request(list(range(16)))           # 4 block hits
+    m = mgr.cache.metrics
+    assert m.admissions == 4 and m.hits == 4 and m.misses == 4
+    assert events.count("admit") == 4 and events.count("hit") == 4
+    mgr.on_request(list(range(100, 120)))     # 5 more -> 1 eviction
+    assert mgr.cache.metrics.evictions == 1
+    assert events.count("evict") == 1
+
+
+def test_radix_policy_masks_children_through_backend():
+    """The masked Eq.1 scan: blocks with live children (or protected)
+    score +inf through the backend's rac_value_masked."""
+    from repro.core.store import ResidentStore
+    store = ResidentStore(4, 1)
+    pol = RadixRACPolicy(4, store)
+    pol.masked_value_backend = NumpyBackend().rac_value_masked
+    tid = pol.touch_topic(None, 1)
+    for cid, parent in [(0, -1), (1, 0), (2, 1)]:
+        store.insert(cid, np.zeros(1, np.float32))
+        pol.stage(topic=tid, parent=parent)
+        pol.on_admit(cid, None, 1)
+    pol.protect.clear()
+    pol._fresh = -1
+    cids, values, valid = pol.value_scores(t=2)
+    by = dict(zip(cids.tolist(), values.tolist()))
+    assert by[0] == np.inf and by[1] == np.inf      # live children
+    assert np.isfinite(by[2])                       # leaf is evictable
+    assert pol.victim(2) == 2
+
+
+@pytest.mark.parametrize("backend", ["kernel"])
+def test_kernel_backend_manager_keeps_radix_validity(backend):
+    """Device scoring path (jnp oracle on CPU): the children-first mask is
+    a hard constraint regardless of float32 value rounding."""
+    mgr = KVBlockManager(n_blocks=8, block_tokens=4, backend=backend,
+                         use_pallas=False)
+    rng = np.random.default_rng(5)
+    for i in range(40):
+        base = 100 * int(rng.integers(0, 12))
+        mgr.on_request(list(range(base, base + int(rng.integers(4, 20)))))
+        for bid, b in mgr.blocks.items():
+            for ch in b.children:
+                assert ch in mgr.blocks
+            assert b.parent < 0 or b.parent in mgr.blocks, \
+                f"orphan block {bid}: parent evicted first"
+    assert mgr.cache.metrics.evictions > 0
+
+
+def test_kv_manager_checkpoint_restores_mirror_with_cache():
+    """The manager's checkpoint covers both the facade state and the
+    radix mirror, so a restored manager never reports prefix hits for
+    blocks the cache no longer holds."""
+    mgr = KVBlockManager(n_blocks=8, block_tokens=4)
+    mgr.on_request(list(range(8)))
+    snap = mgr.checkpoint()
+    mgr.on_request(list(range(100, 120)))     # churn past capacity
+    assert len(mgr.blocks) > 2
+    mgr.restore(snap)
+    assert mgr.used == 2 and len(mgr.blocks) == 2
+    assert set(mgr.blocks) == set(mgr.cache.store.keys())
+    r = mgr.on_request(list(range(8)))        # rolled-back chain hits again
+    assert r["hit_tokens"] == 8
+    r2 = mgr.on_request(list(range(100, 108)))  # churned chain is gone
+    assert r2["hit_tokens"] == 0
+
+
+def test_rac_value_masked_kernel_matches_numpy():
+    rng = np.random.default_rng(0)
+    from repro.cache import KernelBackend
+    nb, kb = NumpyBackend(), KernelBackend(use_pallas=False)
+    tsi = rng.random(64)
+    tids = rng.integers(0, 8, 64)
+    tp_last = rng.random(8) * 5
+    t_last = rng.integers(0, 300, 8)
+    valid = rng.random(64) < 0.6
+    a = nb.rac_value_masked(tsi, tids, tp_last, t_last, 0.001, 400, valid)
+    b = kb.rac_value_masked(tsi, tids, tp_last, t_last, 0.001, 400, valid)
+    assert np.array_equal(np.isinf(a), np.isinf(b))
+    np.testing.assert_allclose(a[valid], b[valid], rtol=1e-5)

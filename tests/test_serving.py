@@ -40,6 +40,35 @@ def test_engine_batches_multiple_misses(engine):
     assert all(len(r.out_tokens) == 4 for r in done)
 
 
+def test_engine_async_admit_matches_sync():
+    """The acceptance criterion: with async_admit the engine returns
+    identical request outputs (tokens, hit flags) to the blocking path,
+    while generation slots no longer pay the admit cost inline."""
+    from repro.core import SynthConfig, synthetic_trace
+
+    mcfg = smoke_variant(get_config("paper"))
+    trace = synthetic_trace(SynthConfig(trace_len=60, n_topics=8, seed=4))
+    rng = np.random.default_rng(4)
+    reqs = [(r.cid, r.emb, list(rng.integers(2, mcfg.vocab_size, size=3)))
+            for r in trace.requests]
+
+    def run(async_admit):
+        eng = ServingEngine(mcfg, EngineConfig(
+            cache_capacity=16, max_new_tokens=3, max_batch=4, max_seq=64,
+            async_admit=async_admit))
+        done = eng.run([(c, e, list(t)) for c, e, t in reqs])
+        out = [(r.rid, r.cid, r.cached, tuple(r.out_tokens)) for r in done]
+        stats = eng.stats
+        eng.close()
+        return out, stats
+
+    out_sync, s_sync = run(False)
+    out_async, s_async = run(True)
+    assert out_sync == out_async
+    for k in ("hits", "misses", "evictions", "generated_tokens", "batches"):
+        assert s_sync[k] == s_async[k], k
+
+
 # ------------------------------------------------------------ KV blocks
 def test_kv_prefix_reuse():
     mgr = KVBlockManager(n_blocks=64, block_tokens=4)
