@@ -1,0 +1,110 @@
+"""Decision-path benchmark: fused batched replay vs the per-request loop.
+
+Replays one semantic-mode RAC sweep two ways and measures wall time:
+
+  - **legacy**: ``run_policy`` — one backend Top-1 call per request (the
+    historical host round-trip per arrival);
+  - **fused**: ``run_policy_batched`` — ONE fused ``decide_batch`` launch
+    per chunk (hit Top-1 + routing + victim scoring over the
+    device-mirrored PolicyTable), with the exact incremental rescore
+    closing the snapshot gap, swept over chunk sizes.
+
+Because the batched replay is now *exact*, the two paths must produce
+bit-identical hit/miss/eviction counts — asserted on every row, so the
+speedup is measured between decision-equivalent runs (same trajectory,
+same evictions), not merely similar ones.
+
+The legacy baseline runs twice, bracketing the fused chunk sweep, and the
+speedup compares against the *mean* of the two — shared boxes throttle
+over a multi-minute benchmark, and an A/B layout that always runs one
+mode first would hand that mode the cool-CPU advantage.
+
+    PYTHONPATH=src python -m benchmarks.decision_path_bench
+    PYTHONPATH=src python -m benchmarks.decision_path_bench --smoke
+
+Env knobs: BENCH_DECISION_LEN (default 50000 requests).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from repro.core import SynthConfig, run_policy, run_policy_batched, \
+    synthetic_trace
+from repro.core.rac import make_rac
+
+from .common import emit, save_json
+
+N_REQUESTS = int(os.environ.get("BENCH_DECISION_LEN", "50000"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--backend", default="kernel",
+                    choices=["numpy", "kernel", "sharded"],
+                    help="kernel (default) measures the device decision "
+                         "path, where the per-request loop pays one "
+                         "dispatch per arrival; numpy measures the host "
+                         "slab-scan engines")
+    ap.add_argument("--chunks", default="64,512,4096")
+    ap.add_argument("--pallas", action="store_true",
+                    help="use the Pallas kernels (device path) instead of "
+                         "the jnp oracles under kernel/sharded backends")
+    args = ap.parse_args(argv)
+    n = args.requests or (2000 if args.smoke else N_REQUESTS)
+    chunks = [int(c) for c in args.chunks.split(",") if c]
+    trace = synthetic_trace(SynthConfig(trace_len=n, seed=0))
+    cap = max(64, int(0.1 * trace.meta["unique"]))
+
+    def legacy_run():
+        return run_policy(trace, cap, make_rac(), hit_mode="semantic",
+                          backend=args.backend, use_pallas=args.pallas,
+                          name="RAC")
+
+    legacy = legacy_run()
+    ref = (legacy.hits, legacy.misses, legacy.evictions)
+    rows = [{"mode": "legacy_per_request", "chunk": 1,
+             "wall_s": legacy.wall_s, "hits": legacy.hits,
+             "evictions": legacy.evictions,
+             "us_per_request": 1e6 * legacy.wall_s / n}]
+    emit(f"decision_path/legacy/{args.backend}",
+         rows[0]["us_per_request"],
+         f"wall={legacy.wall_s:.2f}s,hits={legacy.hits}")
+
+    best = None
+    for chunk in chunks:
+        s = run_policy_batched(trace, cap, make_rac(), hit_mode="semantic",
+                               backend=args.backend, chunk=chunk,
+                               use_pallas=args.pallas, name="RAC")
+        assert (s.hits, s.misses, s.evictions) == ref, \
+            f"fused chunk={chunk} diverged from the exact replay: " \
+            f"{(s.hits, s.misses, s.evictions)} != {ref}"
+        rows.append({"mode": "fused", "chunk": chunk, "wall_s": s.wall_s,
+                     "hits": s.hits, "evictions": s.evictions,
+                     "us_per_request": 1e6 * s.wall_s / n})
+        best = min(best, s.wall_s) if best is not None else s.wall_s
+        emit(f"decision_path/fused/{args.backend}/chunk{chunk}",
+             rows[-1]["us_per_request"],
+             f"wall={s.wall_s:.2f}s,exact=1")
+
+    legacy2 = legacy_run()                   # drift bracket (see docstring)
+    rows.append({"mode": "legacy_per_request", "chunk": 1,
+                 "wall_s": legacy2.wall_s, "hits": legacy2.hits,
+                 "evictions": legacy2.evictions,
+                 "us_per_request": 1e6 * legacy2.wall_s / n})
+    emit(f"decision_path/legacy2/{args.backend}",
+         rows[-1]["us_per_request"], f"wall={legacy2.wall_s:.2f}s")
+    legacy_wall = 0.5 * (legacy.wall_s + legacy2.wall_s)
+    speedup = legacy_wall / max(best, 1e-9)
+    emit(f"decision_path/speedup/{args.backend}", 0.0,
+         f"fused_over_legacy={speedup:.2f}x,requests={n}")
+    save_json("decision_path_bench.json",
+              {"backend": args.backend, "requests": n, "capacity": cap,
+               "rows": rows, "speedup": speedup})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

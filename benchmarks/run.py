@@ -11,10 +11,10 @@ from __future__ import annotations
 
 import sys
 
-from . import (cache_api_bench, faithfulness, fig1_example, fig2_stress,
-               fig3_real, fig4_ablation, fig5_sensitivity, kernel_bench,
-               overhead, roofline, serving_async_bench,
-               sharded_lookup_bench)
+from . import (cache_api_bench, decision_path_bench, faithfulness,
+               fig1_example, fig2_stress, fig3_real, fig4_ablation,
+               fig5_sensitivity, kernel_bench, overhead, roofline,
+               serving_async_bench, sharded_lookup_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -29,6 +29,7 @@ SUITES = {
     "cache_api": lambda: cache_api_bench.main([]),  # facade lookup throughput
     "sharded": lambda: sharded_lookup_bench.main([]),  # multi-device lookup
     "serving_async": lambda: serving_async_bench.main([]),  # admit slot stall
+    "decision": lambda: decision_path_bench.main([]),  # fused vs per-request
 }
 
 

@@ -8,6 +8,11 @@ dispatch through a pluggable :class:`LookupBackend` — :class:`NumpyBackend`
 scans the host slab, :class:`KernelBackend` batches Top-1 retrieval through
 the ``kernels/ops.sim_top1`` Pallas kernel and scores evictions with
 ``kernels/ops.rac_value`` on device — with identical hit decisions.
+``decide_batch`` goes further: one fused launch per query chunk scores hit
+Top-1, Alg. 4 topic routing, and masked Eq. 1 victim values against the
+RAC policy's journaled :class:`~repro.core.policy_table.PolicyTable`,
+which device backends mirror with dirty-row scatters (the exact batched
+replay and the serving engine's queue scan both ride it).
 
 The facade is *event-driven*: every transition fires a subscribable hook
 (``"hit" | "miss" | "admit" | "evict"``), and admission itself can leave
@@ -86,11 +91,11 @@ from .backends import (KernelBackend, LookupBackend, NumpyBackend,
 from .facade import SemanticCache
 from .sharded import ShardedKernelBackend, ShardedStore
 from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
-                    CacheMiss, CacheResult)
+                    CacheMiss, CacheResult, DecisionBatch)
 
 __all__ = [
     "SemanticCache", "CacheConfig", "CacheHit", "CacheMiss", "CacheResult",
-    "CacheEvent", "CacheMetrics", "LookupBackend", "NumpyBackend",
-    "KernelBackend", "ShardedKernelBackend", "ShardedStore", "get_backend",
-    "AsyncAdmitter",
+    "CacheEvent", "CacheMetrics", "DecisionBatch", "LookupBackend",
+    "NumpyBackend", "KernelBackend", "ShardedKernelBackend", "ShardedStore",
+    "get_backend", "AsyncAdmitter",
 ]

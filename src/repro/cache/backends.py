@@ -1,12 +1,17 @@
 """Pluggable lookup/scoring backends behind :class:`repro.cache.SemanticCache`.
 
-A backend answers two questions over the resident slab
-(:class:`repro.core.store.ResidentStore`):
+A backend answers three questions over the resident slab
+(:class:`repro.core.store.ResidentStore`) and the RAC scoring state
+(:class:`repro.core.policy_table.PolicyTable`):
 
   - Top-1 retrieval: for a (batch of) query embedding(s), which resident
     entry is most similar, and how similar?  (hit determination)
   - RAC value scoring: Eq. 1 ``TP(Z_q)·TSI(q)`` over the resident table.
     (eviction scoring)
+  - Fused decision scoring (``decide_batch``): hit Top-1 + Alg. 4 topic
+    routing against the representative table + occupancy-masked Eq. 1
+    victim values, all from ONE launch per query chunk — the replay loop's
+    and the serving engine's snapshot scoring surface.
 
 Three implementations with identical hit decisions:
 
@@ -29,17 +34,25 @@ Three implementations with identical hit decisions:
 
 Backends are stateless with respect to the host store: they read the store
 that is passed in, so one backend instance can serve many caches and
-``checkpoint()/restore()`` needs no backend cooperation (the sharded
-backend's device-side slab is a cache keyed by the store's mutation
-version, rebuilt on demand).
+``checkpoint()/restore()`` needs no backend cooperation.  Device backends
+keep *mirrors* — device copies of the host arrays keyed by the owners'
+globally-unique mutation versions, kept fresh by scattering only the rows
+the :class:`~repro.core.store.MutationJournal` reports dirty (a full
+re-upload only on a journal miss, a shape change, or bulk churn).  The
+embedding slab mirrors against the store's journal; the policy table's
+slot and topic array families mirror against its two journals the same
+way, which is what makes the whole decision state device-resident.
 """
 from __future__ import annotations
 
-from typing import Protocol, runtime_checkable
+from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core.policy_table import PolicyTable
 from repro.core.store import ResidentStore
+
+from .types import DecisionBatch
 
 
 @runtime_checkable
@@ -80,6 +93,66 @@ class LookupBackend(Protocol):
         (used by radix block eviction, where structurally-protected blocks
         must never win the min-value victim scan)."""
         ...
+
+    def decide_batch(self, store: ResidentStore,
+                     table: Optional[PolicyTable], queries: np.ndarray, *,
+                     alpha: float = 0.0, t_now: int = 0) -> DecisionBatch:
+        """Fused snapshot decision scoring for a (B, D) query block: hit
+        Top-1 + routing Top-1 + masked Eq. 1 victim values in one launch.
+        ``table=None`` (baseline policies) degrades to hit Top-1 only."""
+        ...
+
+
+class _DeviceMirror:
+    """Device copy of equally-row-indexed host arrays, kept fresh by
+    dirty-row scatter against a :class:`MutationJournal`'s answers.
+
+    ``sync(version, dirty_since, host_fn)`` returns jnp arrays of the
+    ``dtypes`` declared at construction.  Same version → cached as-is with
+    ZERO host work (``host_fn`` is only called on staleness, and the
+    incremental branch casts only the dirty rows, so steady state is
+    O(mutated rows) on the host too); journal-answerable small delta →
+    ``.at[rows].set`` scatter; anything else (foreign lineage, aged-out
+    journal, array growth, bulk churn) → full upload."""
+
+    def __init__(self, dtypes: dict):
+        self.dtypes = dtypes
+        self.version = None
+        self.arrays: Optional[dict] = None
+        self.stats = {"full": 0, "incremental": 0, "rows": 0}
+
+    def sync(self, version: int, dirty_since, host_fn) -> dict:
+        import jax.numpy as jnp
+        if self.arrays is not None and version == self.version:
+            return self.arrays
+        host = host_fn()                       # raw host arrays, no casts
+        dirty = None
+        if self.arrays is not None and all(
+                self.arrays[k].shape == v.shape for k, v in host.items()):
+            dirty = dirty_since(self.version)
+        n_rows = next(iter(host.values())).shape[0]
+        if dirty is not None and len(dirty) <= max(64, n_rows // 4):
+            if dirty:
+                rows = np.fromiter(sorted(dirty), dtype=np.int64,
+                                   count=len(dirty))
+                # pad to a bucket of 64 by repeating the last dirty row
+                # (re-setting a row to the same value is a no-op) so XLA
+                # compiles one scatter per bucket, not per distinct count
+                pad = (-len(rows)) % 64
+                if pad:
+                    rows = np.pad(rows, (0, pad), mode="edge")
+                self.arrays = {
+                    k: self.arrays[k].at[rows].set(
+                        np.asarray(v[rows], dtype=self.dtypes[k]))
+                    for k, v in host.items()}
+                self.stats["incremental"] += 1
+                self.stats["rows"] += len(dirty)
+        else:
+            self.arrays = {k: jnp.asarray(np.asarray(v, self.dtypes[k]))
+                           for k, v in host.items()}
+            self.stats["full"] += 1
+        self.version = version
+        return self.arrays
 
 
 class NumpyBackend:
@@ -122,6 +195,31 @@ class NumpyBackend:
         vals = self.rac_value(tsi, tids, tp_last, t_last, alpha, t_now)
         return np.where(np.asarray(valid, dtype=bool), vals, np.inf)
 
+    def decide_batch(self, store, table, queries, *, alpha=0.0, t_now=0):
+        """Host oracle of the fused decision pass (see the protocol)."""
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        hit_cid, hit_sim = self.top1_batch(store, queries)
+        route_tid = np.full(b, -1, dtype=np.int64)
+        route_sim = np.full(b, -np.inf, dtype=np.float64)
+        victim = None
+        if table is not None:
+            k = table.topic_hwm
+            live_tids = np.flatnonzero(table.rep_valid[:k])
+            if live_tids.size:
+                # score live topics only: tids are never recycled, so the
+                # dense table is mostly retired rows — the gather keeps the
+                # host oracle O(live topics), with identical decisions (a
+                # retired row could never win a gated route anyway)
+                sims = queries @ table.rep[live_tids].T      # (B, live)
+                best = np.argmax(sims, axis=1)
+                route_sim = sims[np.arange(b), best].astype(np.float64)
+                route_tid = live_tids[best].astype(np.int64)
+            victim = self.rac_value_masked(
+                table.tsi, np.maximum(table.topic_of, 0), table.tp_last,
+                table.t_last, alpha, t_now, store.occ)
+        return DecisionBatch(hit_cid, hit_sim, route_tid, route_sim, victim)
+
 
 class KernelBackend:
     """Device path: batched Top-1 via the ``sim_top1`` Pallas kernel and
@@ -131,6 +229,13 @@ class KernelBackend:
     stable shape; query batches are padded up to a multiple of ``q_pad``
     for the same reason.  ``use_pallas=False`` routes through the jnp
     oracles (useful on CPU where interpret-mode overhead dominates).
+
+    The fused decision path keeps the whole scoring state device-resident:
+    three :class:`_DeviceMirror`\\ s hold the embedding slab + occupancy
+    (synced against the store's mutation journal), the policy table's slot
+    slabs (tsi/topic, its slot journal), and its topic tables (TP state +
+    representatives, its topic journal).  Steady-state replay therefore
+    moves O(mutated rows) per chunk, not O(capacity).
     """
 
     name = "kernel"
@@ -140,6 +245,21 @@ class KernelBackend:
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.q_pad = max(1, q_pad)
+        self._store_mirror = _DeviceMirror({"emb": np.float32,
+                                            "occ": np.int32})
+        self._slot_mirror = _DeviceMirror({"tsi": np.float32,
+                                           "tid": np.int32})
+        self._topic_mirror = _DeviceMirror({"rep": np.float32,
+                                            "tp": np.float32,
+                                            "tl": np.int32})
+
+    @property
+    def sync_stats(self) -> dict:
+        """Aggregate mirror observability: full uploads vs dirty-row
+        scatters, and total rows scattered."""
+        mirrors = (self._store_mirror, self._slot_mirror, self._topic_mirror)
+        return {k: sum(m.stats[k] for m in mirrors)
+                for k in ("full", "incremental", "rows")}
 
     def top1(self, store: ResidentStore, query: np.ndarray) -> tuple[int, float]:
         cids, sims = self.top1_batch(store, np.asarray(query)[None, :])
@@ -213,6 +333,51 @@ class KernelBackend:
                             float(alpha), 0, use_pallas=self.use_pallas,
                             interpret=self.interpret)
         return np.asarray(out, dtype=np.float64)
+
+    def _device_state(self, store: ResidentStore, table: PolicyTable) -> dict:
+        """The mirrored decision state, freshened by dirty-row scatter."""
+        slab = self._store_mirror.sync(
+            store.version, store.dirty_since,
+            lambda: {"emb": store.emb, "occ": store.occ})
+        slot = self._slot_mirror.sync(
+            table.slot_version, table.dirty_slots_since,
+            lambda: {"tsi": table.tsi, "tid": table.topic_of})
+        topic = self._topic_mirror.sync(
+            table.topic_version, table.dirty_topics_since,
+            lambda: {"rep": table.rep, "tp": table.tp_last,
+                     "tl": table.t_last})
+        return {**slab, **slot, **topic}
+
+    def decide_batch(self, store, table, queries, *, alpha=0.0, t_now=0):
+        from repro.kernels import ops
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        if table is None:
+            hit_cid, hit_sim = self.top1_batch(store, queries)
+            return DecisionBatch(hit_cid, hit_sim,
+                                 np.full(b, -1, dtype=np.int64),
+                                 np.full(b, -np.inf, dtype=np.float64), None)
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        dev = self._device_state(store, table)
+        # ONE fused dispatch: hit Top-1 (runtime n_valid = store hwm) +
+        # routing Top-1 (runtime n_topics = topic hwm) + masked Eq.1 victim
+        # values with a runtime t_now — nothing recompiles as fill level,
+        # topic count, or simulation time advance
+        hv, hi, rv, ri, vv = ops.fused_decide(
+            qp, dev["emb"], store.hwm, dev["rep"], table.topic_hwm,
+            dev["tsi"], dev["tid"], dev["occ"], dev["tp"], dev["tl"],
+            t_now, alpha=float(alpha), use_pallas=self.use_pallas,
+            interpret=self.interpret)
+        hv = np.asarray(hv[:b], dtype=np.float64)
+        cids = store.cid[np.asarray(hi[:b])].copy()
+        # a free (zeroed) slot can only win when all real sims < 0 → miss
+        sims = np.where(cids >= 0, hv, -np.inf)
+        rv = np.asarray(rv[:b], dtype=np.float64)
+        ri = np.where(np.isfinite(rv),
+                      np.asarray(ri[:b], dtype=np.int64), -1)
+        return DecisionBatch(cids, sims, ri, rv,
+                             np.asarray(vv, dtype=np.float64))
 
 
 def _backends() -> dict:

@@ -43,7 +43,7 @@ from repro.core.types import Request
 
 from .backends import LookupBackend, get_backend
 from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
-                    CacheMiss, CacheResult)
+                    CacheMiss, CacheResult, DecisionBatch)
 
 PolicyFactory = Callable[[int, ResidentStore], Any]
 
@@ -195,6 +195,27 @@ class SemanticCache:
         this call; pair with ``lookup(..., top1=...)`` to apply results."""
         with self._lock:
             return self.backend.top1_batch(self.store, np.asarray(embs))
+
+    def decide_batch(self, embs: np.ndarray, *,
+                     t: Optional[int] = None) -> "DecisionBatch":
+        """Fused snapshot decision scoring over a (B, D) query block — ONE
+        backend launch computes the Top-1 hit candidates, the Alg. 4
+        topic-routing candidates, and the masked Eq. 1 victim values over
+        the policy's :class:`~repro.core.policy_table.PolicyTable` (device
+        backends mirror the table by dirty-row scatter, so steady-state
+        chunks move O(mutations), not O(capacity)).  Like ``peek_batch``
+        this has no policy/metrics side effects; the hit columns are
+        exactly ``peek_batch``'s answer, so consumers that only need hit
+        determination (the serving engine's queue scan) use them
+        interchangeably.  With a table-less policy (baselines) the routing
+        and victim columns degrade to sentinels."""
+        embs = np.asarray(embs, dtype=np.float32)
+        with self._lock:
+            t_now = self.clock if t is None else t
+            table = getattr(self.policy, "table", None)
+            alpha = float(getattr(self.policy, "alpha", 0.0))
+            return self.backend.decide_batch(self.store, table, embs,
+                                             alpha=alpha, t_now=t_now)
 
     def peek_rows(self, embs: np.ndarray, cids: Sequence[int]
                   ) -> tuple[np.ndarray, np.ndarray]:

@@ -39,6 +39,8 @@ import numpy as np
 
 from repro.core.store import ResidentStore
 
+from .types import DecisionBatch
+
 
 class ShardedStore(ResidentStore):
     """Row-partitioned resident slab with least-loaded shard placement.
@@ -111,6 +113,7 @@ class ShardedKernelBackend:
         self._mesh_built = False
         self._lookup_fn = None
         self._rac_fns: dict[float, object] = {}
+        self._decide_fns: dict[float, object] = {}
         self._slab_cache: dict[int, tuple] = {}    # store.version -> (slab, nv)
         self._scatter_fn = None                    # dirty-row device update
         # observability for the incremental path: full uploads vs dirty-row
@@ -343,3 +346,103 @@ class ShardedKernelBackend:
                          valid):
         vals = self.rac_value(tsi, tids, tp_last, t_last, alpha, t_now)
         return np.where(np.asarray(valid, dtype=bool), vals, np.inf)
+
+    # ------------------------------------------------------ fused decisions
+    def _build_decide(self, alpha: float):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels.ops import fused_decide_raw
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def local_decide(q, slab, nv, reps, ntop, tsi, tid, occ, tp, tl, tn):
+            # q/reps/topic tables replicated; slab (1, R, D), nv (1,), and
+            # the flat slot arrays' (R,) slices belong to this shard
+            hv, hi, rv, ri, vv = fused_decide_raw(
+                q, slab[0], nv[0], reps, ntop[0], tsi, tid, occ, tp, tl,
+                tn[0], alpha=alpha, use_pallas=use_pallas,
+                interpret=interpret)
+            gv = jax.lax.all_gather(hv, "cache")               # (S, B)
+            gi = jax.lax.all_gather(hi, "cache")               # (S, B)
+            win = jnp.argmax(gv, axis=0)   # ONE argmax-reduce over shards —
+            b = jnp.arange(gv.shape[1])    # the same merge as top1_batch
+            return (gv[win, b], win.astype(jnp.int32), gi[win, b],
+                    rv, ri, vv)
+
+        return jax.jit(shard_map(
+            local_decide, mesh=self._mesh,
+            in_specs=(P(), P("cache"), P("cache"), P(), P(), P("cache"),
+                      P("cache"), P("cache"), P(), P(), P()),
+            out_specs=(P(), P(), P(), P(), P(), P("cache")),
+            check_rep=False))
+
+    def decide_batch(self, store: ShardedStore, table, queries, *,
+                     alpha=0.0, t_now=0):
+        """Fused per-shard decision pass with the PR 2 Top-1 merge.
+
+        Every shard runs the identical fused body (hit Top-1 over its slab
+        rows + replicated routing Top-1 + masked Eq. 1 over its slice of
+        the slot table) in ONE ``shard_map`` launch; the per-shard hit
+        candidates are all-gathered and merged by a single argmax-reduce —
+        exactly how ``top1_batch`` merges — and the per-shard victim
+        slices are stitched back into one slot-indexed value vector.  The
+        big embedding slab rides the version-keyed device cache
+        (dirty-row scatter); the small slot/topic arrays are shipped per
+        call.  With too few devices the identical math runs as the
+        single-device loop, so decisions stay topology-independent.
+        """
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        if table is None:
+            hit_cid, hit_sim = self.top1_batch(store, queries)
+            return DecisionBatch(hit_cid, hit_sim,
+                                 np.full(b, -1, dtype=np.int64),
+                                 np.full(b, -np.inf, dtype=np.float64), None)
+        from repro.kernels import ops
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        tsi = table.tsi.astype(np.float32)
+        tid = table.topic_of.astype(np.int32)
+        occ = store.occ.astype(np.int32)
+        tp = table.tp_last.astype(np.float32)
+        tl = table.t_last.astype(np.int32)
+        rows = store.rows_per_shard
+        if self.mesh() is not None:
+            slab, nv = self._slab(store)
+            fn = self._decide_fns.get(float(alpha))
+            if fn is None:
+                fn = self._decide_fns[float(alpha)] = \
+                    self._build_decide(float(alpha))
+            hv, shard, local, rv, ri, vv = fn(
+                qp, slab, nv, table.rep, np.asarray([table.topic_hwm],
+                                                    dtype=np.int32),
+                tsi, tid, occ, tp, tl,
+                np.asarray([t_now], dtype=np.int32))
+            hv = np.asarray(hv[:b], dtype=np.float64)
+            gslot = (np.asarray(shard[:b], dtype=np.int64) * rows
+                     + np.asarray(local[:b], dtype=np.int64))
+            rv = np.asarray(rv[:b], dtype=np.float64)
+            ri = np.asarray(ri[:b], dtype=np.int64)
+            vv = np.asarray(vv, dtype=np.float64)
+        else:
+            # single-device fallback: the hit merge is top1_batch's loop
+            # (identical decisions), routing + victim are one call each
+            hit_cid, hit_sim = self.top1_batch(store, queries)
+            rv_, ri_ = ops.sim_top1(qp, table.rep, n_valid=table.topic_hwm,
+                                    use_pallas=self.use_pallas,
+                                    interpret=self.interpret)
+            vv = np.asarray(ops.victim_value(
+                tsi, tid, occ, tp, tl, t_now, alpha=float(alpha),
+                use_pallas=self.use_pallas, interpret=self.interpret),
+                dtype=np.float64)
+            rv = np.asarray(rv_[:b], dtype=np.float64)
+            ri = np.where(np.isfinite(rv),
+                          np.asarray(ri_[:b], dtype=np.int64), -1)
+            return DecisionBatch(hit_cid, hit_sim, ri, rv, vv)
+        cids = store.cid[gslot].copy()
+        # a free (zeroed) slot can only win when all real sims < 0 → miss
+        sims = np.where(cids >= 0, hv, -np.inf)
+        ri = np.where(np.isfinite(rv), ri, -1)
+        return DecisionBatch(cids, sims, ri, rv, vv)

@@ -83,6 +83,30 @@ CacheResult = Union[CacheHit, CacheMiss]
 
 
 @dataclasses.dataclass
+class DecisionBatch:
+    """One fused decision launch over a (B, D) query block.
+
+    The snapshot scoring surface of the whole RAC decision loop (see
+    ``LookupBackend.decide_batch``): Top-1 hit candidates per query, Alg. 4
+    topic-routing candidates per query, and Eq. 1 victim values over the
+    slot table.  Routing outputs are *candidates* — gate ``route_sim``
+    against ``tau_route`` before use (an invalid/retired topic row can win
+    only with a non-positive similarity).  ``victim_value`` is the
+    Eq.1-literal ``TP·TSI`` (the ``value_mode="paper"`` reading, what
+    ``rac_value`` computes); free slots score ``+inf``.  It is ``None``
+    when the policy has no :class:`~repro.core.policy_table.PolicyTable`
+    (baseline policies), in which case ``route_*`` degrade to ``-1``/
+    ``-inf`` and only the hit columns are meaningful.
+    """
+
+    hit_cid: "np.ndarray"                # (B,) int64: Top-1 resident or -1
+    hit_sim: "np.ndarray"                # (B,) float64: its cosine or -inf
+    route_tid: "np.ndarray"              # (B,) int64: best topic row or -1
+    route_sim: "np.ndarray"              # (B,) float64: rep cosine or -inf
+    victim_value: Optional["np.ndarray"] = None   # (n_slots,) float64
+
+
+@dataclasses.dataclass
 class CacheEvent:
     """One observable cache transition, delivered to subscribed hooks."""
 

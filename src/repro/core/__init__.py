@@ -4,8 +4,10 @@ Public API:
     - Trace generation:  synthetic_trace, oasst_style_trace, SynthConfig,
       OASSTConfig
     - Policies:          RACPolicy (+ make_rac, RAC_VARIANTS), BASELINES
-    - Simulation:        run_policy, run_policy_batched, run_many,
-      default_factories, hr_full
+    - Policy state:      PolicyTable (journaled RAC scoring slabs; device
+      backends mirror it for the fused decide_batch path), MutationJournal
+    - Simulation:        run_policy, run_policy_batched (exact incremental
+      batched replay), run_many, default_factories, hr_full
     - Types:             Request, Trace, Stats
 
 The cache protocol itself (lookup / admit / evict, payloads, metrics,
@@ -14,23 +16,27 @@ traces through that facade.
 """
 from .embeddings import EmbeddingSpace, cosine
 from .policies import BASELINES, Policy
+from .policy_table import PolicyTable
 from .rac import RAC_VARIANTS, RACPolicy, make_rac
 from .radix import RadixRACPolicy
 from .simulator import (default_factories, hr_full, run_many, run_policy,
                         run_policy_batched)
-from .store import ResidentStore
-from .structural import pagerank_power_jax, pagerank_reversed
+from .store import MutationJournal, ResidentStore
+from .structural import pagerank_power_jax, pagerank_reversed, \
+    pagerank_scores
 from .traces import (OASSTConfig, SynthConfig, measured_long_reuse_ratio,
                      oasst_style_trace, synthetic_trace)
 from .types import Request, Stats, Trace, summarize
 
 __all__ = [
     "EmbeddingSpace", "cosine", "BASELINES", "Policy", "RACPolicy",
-    "RadixRACPolicy",
+    "RadixRACPolicy", "PolicyTable",
     "RAC_VARIANTS", "make_rac", "run_policy", "run_policy_batched",
     "run_many",
-    "default_factories", "hr_full", "ResidentStore", "pagerank_reversed",
-    "pagerank_power_jax", "SynthConfig", "OASSTConfig", "synthetic_trace",
+    "default_factories", "hr_full", "MutationJournal", "ResidentStore",
+    "pagerank_reversed",
+    "pagerank_power_jax", "pagerank_scores", "SynthConfig", "OASSTConfig",
+    "synthetic_trace",
     "oasst_style_trace", "measured_long_reuse_ratio", "Request", "Stats",
     "Trace", "summarize",
 ]

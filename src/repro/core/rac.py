@@ -16,36 +16,66 @@ Implements, faithfully:
   - Alg. 5  TSI-max anchor representative with lazy refresh on eviction and
             empty-topic deletion.
   - App.7.2 optional PageRank structural refinement
-            (``structural_mode="pagerank"``).
+            (``structural_mode="pagerank"``, refreshed through
+            ``structural.pagerank_scores`` — the jax power iteration on
+            device by default, the numpy oracle with
+            ``structural_device=False``).
 
 Ablations (§4.4): ``use_tp=False`` → RAC w/o TP; ``use_tsi=False`` → RAC
 w/o TSI.  Ties are broken by (value, last-access, cid) for determinism.
 
-The scoring arrays are kept as dense numpy slabs indexed by store slot, so a
-full eviction scan is one vectorized O(m) pass — this mirrors the TPU path,
-where the same slabs are scored by ``kernels/ops.rac_value`` on device.
+State layout — the PolicyTable split
+------------------------------------
+The per-request *semantics* (routing, DetectParent, the TSI cascade,
+anchor maintenance, ghost metadata) live here as plain Python driving
+dense arrays; the arrays themselves — the slot-aligned freq/dep/tsi/
+topic_of/last_t/arrive_t slabs, the per-topic tp_last/t_last tables, and
+the dense topic-representative matrix — are owned by a
+:class:`repro.core.policy_table.PolicyTable`.  Every mutation stamps the
+table's slot/topic :class:`~repro.core.store.MutationJournal`, so device
+backends mirror the scoring state with dirty-row scatters and serve the
+whole decision surface (Top-1 lookup + Alg. 4 routing + Eq. 1 victim
+scoring) from one fused launch (``decide_batch``).  A full host eviction
+scan stays one vectorized O(m) pass over the same slabs; the facade wires
+``value_backend`` so Eq. 1 scoring can also run through
+``kernels/ops.rac_value`` on device.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from . import structural
 from .policies import Policy
-from .structural import pagerank_reversed
+from .policy_table import PolicyTable
 
 _NEG = -1.0
 
 
 class TopicState:
-    __slots__ = ("tid", "rep", "src", "members", "tp_last", "t_last", "dirty")
+    """Host bookkeeping for one live topic (Alg. 2/5).
 
-    def __init__(self, tid: int, rep: np.ndarray, src: int, t: int):
+    The representative embedding itself lives in the PolicyTable's dense
+    ``rep`` matrix so device routing can score every topic in one kernel;
+    ``rep`` here is a journaled read/write view of that row."""
+
+    __slots__ = ("tid", "table", "src", "members", "dirty")
+
+    def __init__(self, tid: int, table: PolicyTable, rep: np.ndarray,
+                 src: int):
         self.tid = tid
-        self.rep = rep
+        self.table = table
         self.src = src                 # anchor cid realizing rep (Alg. 5)
         self.members: set[int] = set()
-        self.tp_last = 0.0
-        self.t_last = t
         self.dirty = False             # anchor invalidated by eviction
+        table.set_rep(tid, rep)
+
+    @property
+    def rep(self) -> np.ndarray:
+        return self.table.rep[self.tid]
+
+    @rep.setter
+    def rep(self, emb: np.ndarray):
+        self.table.set_rep(self.tid, emb)
 
 
 class RACPolicy(Policy):
@@ -61,6 +91,9 @@ class RACPolicy(Policy):
                  use_tp: bool = True,
                  use_tsi: bool = True,
                  structural_mode: str = "onehop",   # "onehop" | "pagerank"
+                 structural_device: bool = True,
+                                               # pagerank engine: jax power
+                                               # iteration vs numpy oracle
                  pagerank_beta: float = 0.85,
                  pagerank_every: int = 64,     # evictions between PR refreshes
                  topic_memory: bool = True,    # Alg.2 Data: TP state persists
@@ -76,6 +109,8 @@ class RACPolicy(Policy):
                                                #   product of raw counters
                  probation: int = 0,           # beyond-paper: entries younger
                                                # than this are eviction-exempt
+                 ghost_limit: int = 1 << 18,   # FIFO bound on evicted-entry
+                                               # lifetime metadata (g_freq/g_dep)
                  **kw):
         super().__init__(capacity, store)
         assert store is not None, "RAC scores over the resident store"
@@ -88,36 +123,28 @@ class RACPolicy(Policy):
         self.use_tp = use_tp
         self.use_tsi = use_tsi
         self.structural_mode = structural_mode
+        self.structural_device = structural_device
         self.pr_beta = pagerank_beta
         self.pr_every = max(1, pagerank_every)
         self.topic_memory = topic_memory
         self.value_mode = value_mode
         self.probation = probation
 
-        n = store.emb.shape[0]
-        # per-slot metadata slabs (aligned with store slots; these cache the
-        # authoritative per-query lifetime counters for vectorized scoring)
-        self.freq = np.zeros(n, dtype=np.float64)
-        self.dep = np.zeros(n, dtype=np.float64)
-        self.tsi = np.zeros(n, dtype=np.float64)
-        self.topic_of = np.full(n, -1, dtype=np.int64)
-        self.last_t = np.full(n, -1, dtype=np.int64)
-        self.arrive_t = np.full(n, -1, dtype=np.int64)
+        # all scoring slabs (slot axis) and topic tables (topic axis) live
+        # in the journaled PolicyTable so device backends can mirror them
+        self.table = PolicyTable(store.emb.shape[0], store.emb.shape[1])
 
         # lifetime relation metadata (Def. 2: freq(q) counts hits "so far in
         # topic s" — a lifetime counter that survives eviction; par(q_t) "is
         # cached for future accesses").  Bounded FIFO ghosts.
         self.g_freq: dict[int, float] = {}
         self.g_dep: dict[int, float] = {}
-        self.ghost_limit = 1 << 18
+        self.ghost_limit = ghost_limit
         self.par: dict[int, int] = {}          # cid -> parent cid (or -1)
         self.children: dict[int, set[int]] = {}  # resident DAG (for pagerank)
 
         self.topics: dict[int, TopicState] = {}
         self._next_tid = 0
-        # topic TP tables (grown dynamically), indexed by tid
-        self.tp_last = np.zeros(256, dtype=np.float64)
-        self.t_last = np.zeros(256, dtype=np.int64)
         # ghost topic memory (beyond-paper option)
         self.ghost_topics: dict[int, tuple[np.ndarray, float, int]] = {}
         self._evictions = 0
@@ -127,11 +154,19 @@ class RACPolicy(Policy):
         # (tsi, tids, tp_last, t_last, alpha, t_now) -> values
         self.value_backend = None
 
+    # -- table views (the authoritative arrays live in self.table) ---------
+    freq = property(lambda self: self.table.freq)
+    dep = property(lambda self: self.table.dep)
+    tsi = property(lambda self: self.table.tsi)
+    topic_of = property(lambda self: self.table.topic_of)
+    last_t = property(lambda self: self.table.last_t)
+    arrive_t = property(lambda self: self.table.arrive_t)
+    tp_last = property(lambda self: self.table.tp_last)
+    t_last = property(lambda self: self.table.t_last)
+
     # ------------------------------------------------------------------ TP
     def _grow_tp(self, tid: int):
-        while tid >= len(self.tp_last):
-            self.tp_last = np.concatenate([self.tp_last, np.zeros_like(self.tp_last)])
-            self.t_last = np.concatenate([self.t_last, np.zeros_like(self.t_last)])
+        self.table.grow_topics(tid)
 
     def tp_now(self, tid: int, t: int) -> float:
         """Lazy closed-form evaluation (Def. 1)."""
@@ -141,6 +176,7 @@ class RACPolicy(Policy):
         """Decay-and-increment on a topic hit (Alg. 2 lines 6-7)."""
         self.tp_last[tid] = 0.5 ** (self.alpha * (t - self.t_last[tid])) * self.tp_last[tid] + 1.0
         self.t_last[tid] = t
+        self.table.touch_topic(tid)
 
     # -------------------------------------------------------------- routing
     def _refresh_anchor(self, ts: TopicState):
@@ -164,7 +200,10 @@ class RACPolicy(Policy):
             tids = list(self.topics.keys())
             for tid in tids:
                 self._refresh_anchor(self.topics[tid])
-            reps = np.stack([self.topics[tid].rep for tid in tids])
+            # the dense table IS the stacked representative matrix: one
+            # fancy-index gather replaces per-topic stacking
+            reps = self.table.rep[np.fromiter(tids, dtype=np.int64,
+                                              count=len(tids))]
             sims = reps @ emb
             k = min(self.shortlist_k, len(tids))
             short = np.argpartition(-sims, k - 1)[:k]
@@ -180,12 +219,12 @@ class RACPolicy(Policy):
             if sims[gi] >= self.tau_route:
                 tid = gids[gi]
                 rep, tp_last, t_last = self.ghost_topics.pop(tid)
-                ts = TopicState(tid, rep, -1, t)
+                ts = TopicState(tid, self.table, rep, -1)
                 ts.dirty = False
                 self.topics[tid] = ts
-                self._grow_tp(tid)
                 self.tp_last[tid] = tp_last
                 self.t_last[tid] = t_last
+                self.table.touch_topic(tid)
                 return tid
         return -1
 
@@ -193,10 +232,11 @@ class RACPolicy(Policy):
         tid = self._next_tid
         self._next_tid += 1
         self._grow_tp(tid)
-        ts = TopicState(tid, emb, src, t)
+        ts = TopicState(tid, self.table, emb, src)
         self.topics[tid] = ts
         self.tp_last[tid] = 0.0
         self.t_last[tid] = t
+        self.table.touch_topic(tid)
         return tid
 
     # ------------------------------------------------------------- parents
@@ -230,6 +270,7 @@ class RACPolicy(Policy):
         s = self.store.slot_of[cid]
         self.freq[s] += 1.0
         self.tsi[s] = self.freq[s] + self.lam * self.dep[s]
+        self.table.touch_slot(s)
         if cid in self.par:
             qp, new = self.par[cid], False
         else:
@@ -243,6 +284,7 @@ class RACPolicy(Policy):
             sp = self.store.slot_of[qp]
             self.dep[sp] += self.freq[s] if new else 1.0
             self.tsi[sp] = self.freq[sp] + self.lam * self.dep[sp]
+            self.table.touch_slot(sp)
             pt = int(self.topic_of[sp])
             if pt in self.topics and self.topics[pt].src == qp:
                 pass                                   # anchor strengthened
@@ -274,16 +316,19 @@ class RACPolicy(Policy):
             if tid < 0:
                 tid = self._new_topic(req.emb, cid, t)
             self.topic_of[s] = tid
+            self.table.touch_slot(s)
             self.topics[tid].members.add(cid)
         else:
             tid = int(self.topic_of[s])
             if tid not in self.topics:          # defensive; should not happen
                 tid = self._new_topic(self.store.emb[s], cid, t)
                 self.topic_of[s] = tid
+                self.table.touch_slot(s)
                 self.topics[tid].members.add(cid)
         self._refresh_tp(tid, t)                # Alg. 2: topic hit
         self._update_tsi(cid, req.emb, tid, t)  # Alg. 3
         self.last_t[s] = t
+        self.table.touch_slot(s)
         # Alg. 5 OnInsert: promote anchor if newcomer has max TSI
         ts = self.topics[tid]
         if is_admit:
@@ -299,7 +344,9 @@ class RACPolicy(Policy):
 
     # ------------------------------------------------------------- eviction
     def _structural_refresh(self):
-        """Optional App. 7.2: PageRank over resident intra-topic DAGs."""
+        """Optional App. 7.2: PageRank over resident intra-topic DAGs
+        (the jax power iteration by default; ``structural_device=False``
+        selects the numpy oracle)."""
         self._pr_scores.clear()
         for tid, ts in self.topics.items():
             members = [c for c in ts.members if c in self.store.slot_of]
@@ -313,17 +360,27 @@ class RACPolicy(Policy):
                     edges.append((idx[p], idx[c]))
             if not edges:
                 continue
-            r = pagerank_reversed(edges, len(members), beta=self.pr_beta)
+            r = structural.pagerank_scores(edges, len(members),
+                                           beta=self.pr_beta,
+                                           device=self.structural_device)
             scale = len(members)                 # r ~ 1/n → scale to O(1)
             for c, i in idx.items():
                 self._pr_scores[c] = scale * float(r[i])
 
-    def value_scores(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+    def _residents(self) -> tuple[np.ndarray, np.ndarray]:
+        """(cids, slots) of every resident, in insertion order."""
+        n = len(self.store.slot_of)
+        return (np.fromiter(self.store.slot_of.keys(), dtype=np.int64,
+                            count=n),
+                np.fromiter(self.store.slot_of.values(), dtype=np.int64,
+                            count=n))
+
+    def value_scores(self, t: int,
+                     residents: tuple[np.ndarray, np.ndarray] | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
         """Vectorized Value(q) = TP(Z_q)·TSI(q) over all residents."""
-        slots = np.fromiter(self.store.slot_of.values(), dtype=np.int64,
-                            count=len(self.store.slot_of))
-        cids = np.fromiter(self.store.slot_of.keys(), dtype=np.int64,
-                           count=len(self.store.slot_of))
+        cids, slots = residents if residents is not None else \
+            self._residents()
         tids = self.topic_of[slots]
         if self.use_tsi:
             if self.structural_mode == "pagerank" and self._pr_scores:
@@ -350,8 +407,8 @@ class RACPolicy(Policy):
         if self.structural_mode == "pagerank" and self._evictions % self.pr_every == 0:
             self._structural_refresh()
         self._evictions += 1
-        cids, values = self.value_scores(t)
-        slots = np.array([self.store.slot_of[int(c)] for c in cids])
+        cids, slots = self._residents()
+        cids, values = self.value_scores(t, (cids, slots))
         if self.probation > 0:
             # beyond-paper recency guard: fresh entries are exempt unless
             # everything resident is fresh
@@ -379,6 +436,7 @@ class RACPolicy(Policy):
                     if len(self.ghost_topics) > 4096:
                         self.ghost_topics.pop(next(iter(self.ghost_topics)))
                 del self.topics[tid]
+                self.table.clear_topic(tid)
             elif ts.src == cid:
                 ts.src = -1
                 ts.dirty = True                 # lazy refresh (Alg. 5 OnEvict)
@@ -386,8 +444,13 @@ class RACPolicy(Policy):
         # par(cid) stays cached (§3.3).  Resident-DAG edges are pruned.
         self.g_freq[cid] = float(self.freq[s])
         self.g_dep[cid] = float(self.dep[s])
-        if len(self.g_freq) > self.ghost_limit:        # bounded ghosts
-            for _ in range(self.ghost_limit // 16):
+        if len(self.g_freq) > self.ghost_limit:
+            # bounded ghosts: drop the oldest entries FIFO until back under
+            # the cap (a limit//16 batch amortizes the dict churn; the max
+            # with the overshoot keeps the bound hard even for tiny limits)
+            drop = max(1, self.ghost_limit // 16,
+                       len(self.g_freq) - self.ghost_limit)
+            for _ in range(drop):
                 old = next(iter(self.g_freq))
                 self.g_freq.pop(old, None)
                 self.g_dep.pop(old, None)
@@ -396,10 +459,7 @@ class RACPolicy(Policy):
         if p is not None and p >= 0 and p in self.children:
             self.children[p].discard(cid)
         self.children.pop(cid, None)            # children keep their cached par
-        self.freq[s] = 0.0
-        self.dep[s] = 0.0
-        self.tsi[s] = 0.0
-        self.topic_of[s] = -1
+        self.table.clear_slot(s)
         self._pr_scores.pop(cid, None)
 
 

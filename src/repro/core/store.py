@@ -14,13 +14,17 @@ single free-list (LIFO reuse, so occupied slots stay below a high-water
 mark ``hwm`` that device backends pass as the kernel's runtime ``n_valid``);
 :class:`repro.cache.sharded.ShardedStore` overrides ``_alloc``/``_release``
 to route new entries onto the least-loaded shard of a row-partitioned slab.
-``version`` is a globally-unique mutation stamp: two store objects carry
-the same version only if their slabs are identical (deep copies that have
-not diverged), which lets device backends cache an uploaded slab keyed by
-version alone.  A bounded per-store mutation journal records which slot
-each stamp touched, so a device backend holding a slab uploaded at an
-older version of *this* store lineage can ask :meth:`dirty_since` for the
-exact row set to DMA instead of re-uploading the whole slab.
+
+Mutation tracking lives in :class:`MutationJournal`, shared with
+:class:`repro.core.policy_table.PolicyTable` (the RAC scoring slabs ride
+the same dirty-row sync protocol as the embedding slab).  ``version`` is a
+globally-unique mutation stamp: two journaled objects carry the same
+version only if their arrays are identical (deep copies that have not
+diverged), which lets device backends cache an uploaded copy keyed by
+version alone.  The bounded journal records which row each stamp touched,
+so a device backend holding arrays uploaded at an older version of *this*
+lineage can ask :meth:`MutationJournal.dirty_since` for the exact row set
+to DMA instead of re-uploading everything.
 """
 from __future__ import annotations
 
@@ -32,6 +36,54 @@ import numpy as np
 _STAMP = itertools.count(1)     # global mutation stamps (see class docstring)
 
 _JOURNAL_LEN = 4096             # mutations remembered for dirty-row sync
+
+
+class MutationJournal:
+    """Bounded (version, row) mutation log with globally-unique stamps.
+
+    One journal tracks one row-indexed axis of one array family (the
+    store's slot axis, the policy table's slot axis, its topic axis, ...).
+    Deep copies keep their history: stamps are globally unique, so a
+    diverged copy's version can never be mistaken for this lineage's.
+    """
+
+    def __init__(self, maxlen: int = _JOURNAL_LEN):
+        self.maxlen = maxlen
+        self.version = next(_STAMP)
+        # (version, row) pairs, version-ascending.  _base is the version
+        # held just before the oldest journal entry — the earliest version
+        # dirty_since can answer for.
+        self._journal: deque[tuple[int, int]] = deque()
+        self._base = self.version
+
+    def stamp(self, row: int):
+        """Record a mutation of ``row`` under a fresh global version."""
+        self.version = next(_STAMP)
+        self._journal.append((self.version, row))
+        while len(self._journal) > self.maxlen:
+            self._base = self._journal.popleft()[0]
+
+    def dirty_since(self, version: int) -> set[int] | None:
+        """Rows mutated after ``version``, or None if unanswerable.
+
+        ``version`` must be a stamp this exact lineage has held and that
+        is still covered by the journal; anything else returns None (aged
+        out, or a foreign/diverged lineage's stamp).
+        """
+        if version == self.version:
+            return set()
+        if version < self._base:
+            return None                    # aged out (or foreign lineage)
+        known = version == self._base
+        dirty: set[int] = set()
+        for v, row in self._journal:
+            if v <= version:
+                known = known or v == version
+                continue
+            if not known:
+                return None   # ``version`` was never a stamp of this lineage
+            dirty.add(row)
+        return dirty if known else None
 
 
 class ResidentStore:
@@ -46,41 +98,21 @@ class ResidentStore:
         self.slot_of: dict[int, int] = {}      # cid -> slot
         self._free: list[int] = list(range(n - 1, -1, -1))
         self.hwm = 0                           # all occupied slots < hwm
-        self.version = next(_STAMP)
-        # (version, slot) pairs, version-ascending; deepcopied with the
-        # store, so a restored checkpoint keeps its own lineage's history.
-        # _journal_base is the version the slab held just before the oldest
-        # journal entry — the earliest version dirty_since can answer for.
-        self._journal: deque[tuple[int, int]] = deque()
-        self._journal_base = self.version
+        # deepcopied with the store, so a restored checkpoint keeps its own
+        # lineage's history
+        self._log = MutationJournal()
+
+    @property
+    def version(self) -> int:
+        return self._log.version
 
     def _stamp(self, slot: int):
-        self.version = next(_STAMP)
-        self._journal.append((self.version, slot))
-        while len(self._journal) > _JOURNAL_LEN:
-            self._journal_base = self._journal.popleft()[0]
+        self._log.stamp(slot)
 
     def dirty_since(self, version: int) -> set[int] | None:
-        """Slots mutated after ``version``, or None if unanswerable.
-
-        ``version`` must be a stamp this exact store lineage has held and
-        that is still covered by the journal; stamps are globally unique,
-        so a diverged copy's stamp can never be mistaken for ours.
-        """
-        if version == self.version:
-            return set()
-        if version < self._journal_base:
-            return None                        # aged out (or foreign lineage)
-        known = version == self._journal_base
-        dirty: set[int] = set()
-        for v, slot in self._journal:
-            if v <= version:
-                known = known or v == version
-                continue
-            if not known:
-                return None      # ``version`` was never a stamp of this store
-            dirty.add(slot)
-        return dirty if known else None
+        """Slots mutated after ``version`` (see
+        :meth:`MutationJournal.dirty_since`)."""
+        return self._log.dirty_since(version)
 
     def __len__(self) -> int:
         return len(self.slot_of)

@@ -6,10 +6,15 @@ propagates from dependents back to their context anchors.  The stationary
 distribution is computed by power iteration (Proposition 2).
 
 ``pagerank_reversed`` is the pure-numpy oracle used by tests;
-``pagerank_power_jax`` is an equivalent jax.lax.while_loop formulation used
-by the device-side scoring path.
+``pagerank_power_jax`` is an equivalent jax power iteration, and
+``pagerank_scores`` selects between the two — RAC's
+``structural_mode="pagerank"`` drives its refreshes through it with
+``device=True``, so the appendix path runs on the accelerator and the
+oracle stays the parity reference.
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 
@@ -65,3 +70,32 @@ def pagerank_power_jax(adj: "jax.Array", beta: float = 0.85,
 
     r0 = jnp.full((n,), 1.0 / n, dtype=adj.dtype)
     return jax.lax.fori_loop(0, iters, body, r0)
+
+
+@functools.lru_cache(maxsize=1)
+def _pagerank_jit():
+    import jax
+    return jax.jit(pagerank_power_jax, static_argnames=("beta", "iters"))
+
+
+def pagerank_scores(edges: list[tuple[int, int]], n: int,
+                    beta: float = 0.85, device: bool = False,
+                    iters: int = 128) -> np.ndarray:
+    """Stationary scores through a selectable engine.
+
+    ``device=False`` runs the numpy oracle (tolerance-converged);
+    ``device=True`` builds the dense reversed-transition adjacency and runs
+    the jitted :func:`pagerank_power_jax` power iteration (``iters=128``
+    puts the iteration error at ``beta^128 ≈ 1e-9``, below float32
+    resolution, so the two engines agree to numerical precision on simple
+    graphs — edges are assumed unique, which DetectParent's one-parent
+    rule guarantees)."""
+    if not device:
+        return pagerank_reversed(edges, n, beta=beta)
+    if n == 0:
+        return np.zeros(0)
+    adj = np.zeros((n, n), dtype=np.float32)
+    for (u, v) in edges:
+        adj[u, v] = 1.0
+    r = _pagerank_jit()(adj, beta=beta, iters=iters)
+    return np.asarray(r, dtype=np.float64)

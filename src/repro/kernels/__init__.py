@@ -5,6 +5,9 @@
   - flash_attention: causal GQA prefill attention (online softmax).
   - decode_attention: one-token GQA decode over a KV cache.
   - rac_value: device-side RAC Eq.1 scoring over the resident table.
+  - decision: occupancy-masked Eq.1 victim scoring with a runtime t_now;
+    composed with two sim_top1 passes into ``ops.fused_decide`` — the one
+    launch per replay chunk behind the backends' ``decide_batch``.
 
 Public API: :mod:`repro.kernels.ops` (jit'd, padded, CPU interpret-mode
 fallback); oracles in :mod:`repro.kernels.ref`.

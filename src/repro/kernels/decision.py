@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: occupancy-masked RAC victim scoring with runtime time.
+
+The fused decision path (``ops.fused_decide``) scores one replay chunk in a
+single device dispatch: Top-1 similarity over the resident slab (hit
+determination), Top-1 over the topic-representative table (Alg. 4
+routing), and Eq. 1 victim values over the whole slot table.  The two
+Top-1 passes reuse ``similarity_topk``'s kernel; this module supplies the
+third leg.
+
+``victim_value_pallas`` extends the ``rac_value`` kernel two ways that the
+fused path needs:
+
+  - ``t_now`` is a *runtime* scalar delivered through scalar prefetch
+    (``PrefetchScalarGridSpec``), so simulation time advancing between
+    chunks never recompiles — the per-eviction ``rac_value`` kernel instead
+    bakes ``t_now=0`` and shifts timestamps on the host, which would force
+    a re-upload of the whole ``t_last`` table per chunk here.
+  - the occupancy mask is applied *in kernel*: free slots score ``+inf``
+    directly, so the min-value victim scan can run on the fixed-shape slot
+    table without a host-side where().
+
+Tiling matches ``rac_value``: entries stream in tiles of BN with the
+per-topic tables VMEM-resident and gathered per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BN = 1024     # entries per tile
+
+
+def _victim_value_kernel(tn_ref, tsi_ref, tid_ref, occ_ref, tp_ref, tl_ref,
+                         out_ref, *, alpha: float):
+    t_now = tn_ref[0]
+    tid = jnp.maximum(tid_ref[...], 0)         # free slots carry tid -1
+    tp_last = jnp.take(tp_ref[...], tid, axis=0)
+    t_last = jnp.take(tl_ref[...], tid, axis=0)
+    # subtract in int32 first: only the (small) age is cast, so absolute
+    # timestamps past float32's 2^24 integer range never lose precision
+    decay = jnp.exp2(-alpha * (t_now - t_last).astype(jnp.float32))
+    val = decay * tp_last * tsi_ref[...]
+    out_ref[...] = jnp.where(occ_ref[...] > 0, val, jnp.inf)
+
+
+def victim_value_pallas(tsi: jnp.ndarray, tid: jnp.ndarray,
+                        occ: jnp.ndarray, tp_last: jnp.ndarray,
+                        t_last: jnp.ndarray, t_now, alpha: float, *,
+                        interpret: bool = True):
+    """tsi (N,) f32; tid (N,) i32; occ (N,) i32 (0 = free → +inf);
+    tp_last/t_last (T,) topic tables; ``t_now`` a runtime int32 scalar.
+    N must be a BN multiple (pad tsi/tid with 0 and occ with 0)."""
+    n = tsi.shape[0]
+    t = tp_last.shape[0]
+    assert n % BN == 0
+    kernel = functools.partial(_victim_value_kernel, alpha=alpha)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // BN,),
+        in_specs=[pl.BlockSpec((BN,), lambda i, tn: (i,)),
+                  pl.BlockSpec((BN,), lambda i, tn: (i,)),
+                  pl.BlockSpec((BN,), lambda i, tn: (i,)),
+                  pl.BlockSpec((t,), lambda i, tn: (0,)),
+                  pl.BlockSpec((t,), lambda i, tn: (0,))],
+        out_specs=pl.BlockSpec((BN,), lambda i, tn: (i,)))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(t_now, jnp.int32).reshape(1), tsi, tid, occ,
+      tp_last.astype(jnp.float32), t_last.astype(jnp.int32))

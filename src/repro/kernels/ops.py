@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from .decision import BN as _VV_BN, victim_value_pallas
 from .decode_attention import decode_attention_pallas
 from .flash_attention import BQ as _FA_BQ, flash_attention_pallas
 from .rac_value import BN as _RV_BN, rac_value_pallas
@@ -119,6 +120,74 @@ def rac_value(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
     """RAC Eq.1 scoring over the resident table."""
     return rac_value_raw(tsi, tid, tp_last, t_last, alpha, t_now,
                          use_pallas=use_pallas, interpret=interpret)
+
+
+def victim_value_raw(tsi, tid, occ, tp_last, t_last, t_now, *, alpha: float,
+                     use_pallas: bool = True, interpret: bool | None = None):
+    """Un-jitted occupancy-masked Eq.1 body shared by :func:`victim_value`,
+    :func:`fused_decide`, and the sharded backend (per-shard scoring of its
+    slice of the slot table).  ``t_now`` may be a traced int32 scalar —
+    unlike :func:`rac_value`'s static ``t_now=0`` + host timestamp shift,
+    the decision path keeps the uploaded ``t_last`` table fixed and lets
+    simulation time advance at runtime."""
+    if not use_pallas:
+        return ref.victim_value_ref(tsi, tid, occ, tp_last, t_last,
+                                    t_now, alpha)
+    interp = _is_cpu() if interpret is None else interpret
+    n = tsi.shape[0]
+    ts = _pad_to(tsi.astype(jnp.float32), 0, _VV_BN)
+    ti = _pad_to(tid.astype(jnp.int32), 0, _VV_BN)
+    oc = _pad_to(occ.astype(jnp.int32), 0, _VV_BN)      # pad rows score +inf
+    out = victim_value_pallas(ts, ti, oc, tp_last, t_last, t_now, alpha,
+                              interpret=interp)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "use_pallas",
+                                             "interpret"))
+def victim_value(tsi, tid, occ, tp_last, t_last, t_now, *, alpha: float,
+                 use_pallas: bool = True, interpret: bool | None = None):
+    """Occupancy-masked RAC Eq.1 over the fixed-shape slot table with a
+    runtime ``t_now`` (free slots score +inf)."""
+    return victim_value_raw(tsi, tid, occ, tp_last, t_last,
+                            jnp.int32(t_now), alpha=alpha,
+                            use_pallas=use_pallas, interpret=interpret)
+
+
+def fused_decide_raw(queries, slab, n_valid, reps, n_topics, tsi, tid, occ,
+                     tp_last, t_last, t_now, *, alpha: float,
+                     use_pallas: bool = True, interpret: bool | None = None):
+    """Un-jitted fused decision body (also run per shard by the sharded
+    backend): hit Top-1 + routing Top-1 + masked victim values."""
+    hit_vals, hit_idx = sim_top1_raw(queries, slab, n_valid,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
+    route_vals, route_idx = sim_top1_raw(queries, reps, n_topics,
+                                         use_pallas=use_pallas,
+                                         interpret=interpret)
+    victim = victim_value_raw(tsi, tid, occ, tp_last, t_last, t_now,
+                              alpha=alpha, use_pallas=use_pallas,
+                              interpret=interpret)
+    return hit_vals, hit_idx, route_vals, route_idx, victim
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "use_pallas",
+                                             "interpret"))
+def fused_decide(queries, slab, n_valid, reps, n_topics, tsi, tid, occ,
+                 tp_last, t_last, t_now, *, alpha: float,
+                 use_pallas: bool = True, interpret: bool | None = None):
+    """One fused decision dispatch per replay chunk.
+
+    Composes ``sim_top1`` over the resident slab (hit determination, masked
+    to the runtime resident count ``n_valid``), ``sim_top1`` over the dense
+    topic-representative table (Alg. 4 routing, masked to the runtime topic
+    high-water mark ``n_topics``), and the occupancy-masked Eq. 1 victim
+    kernel — all under one jit, so a replay chunk costs one host→device
+    round-trip regardless of chunk size or fill level."""
+    return fused_decide_raw(queries, slab, jnp.int32(n_valid), reps,
+                            jnp.int32(n_topics), tsi, tid, occ, tp_last,
+                            t_last, jnp.int32(t_now), alpha=alpha,
+                            use_pallas=use_pallas, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "t_now", "use_pallas",

@@ -53,3 +53,13 @@ def rac_value_ref(tsi: jnp.ndarray, tid: jnp.ndarray, tp_last: jnp.ndarray,
                   t_last: jnp.ndarray, alpha: float, t_now: int):
     decay = jnp.exp2(-alpha * (t_now - t_last[tid]).astype(jnp.float32))
     return decay * tp_last[tid].astype(jnp.float32) * tsi
+
+
+def victim_value_ref(tsi: jnp.ndarray, tid: jnp.ndarray, occ: jnp.ndarray,
+                     tp_last: jnp.ndarray, t_last: jnp.ndarray, t_now,
+                     alpha: float):
+    """Occupancy-masked Eq.1 with a traced t_now (free slots -> +inf)."""
+    tid = jnp.maximum(tid, 0)                  # free slots carry tid -1
+    decay = jnp.exp2(-alpha * (t_now - t_last[tid]).astype(jnp.float32))
+    val = decay * tp_last[tid].astype(jnp.float32) * tsi
+    return jnp.where(occ > 0, val, jnp.inf)

@@ -5,9 +5,12 @@ Request path (the paper's semantic-cache setting, §2):
      plugs a sentence encoder into ``embed_fn``);
   2. semantic lookup against resident entries through the unified
      :class:`repro.cache.SemanticCache` facade — the whole waiting queue is
-     scored in ONE ``lookup_batch`` call (one ``sim_top1`` kernel launch
-     under the ``"kernel"`` backend) and Top-1 cosine ≥ tau_hit hits return
-     their cached response with zero model compute;
+     scored in ONE fused ``decide_batch`` launch (the backends' one-dispatch
+     decision pass over the device-mirrored slab + RAC PolicyTable under
+     the ``"kernel"``/``"sharded"`` backends), and subsequent rescans only
+     rescore waiting requests against rows admitted since (``peek_rows``);
+     Top-1 cosine ≥ tau_hit hits return their cached response with zero
+     model compute;
   3. miss → schedule for generation under continuous batching; on
      completion, admit (query-embedding, response) into the cache.  The
      facade owns eviction (RAC Value scoring) and drops the evicted
@@ -170,17 +173,18 @@ class ServingEngine:
             if queue:
                 self.cache.flush()
             # batched hit determination: the full queue is scored in ONE
-            # facade call at first entry; afterwards each waiting request
-            # only scores against entries admitted since the last pass
-            # (O(queue x new-admits), not O(queue x store)), keeping its
-            # running best-known top-1 in `peeked`.  A stale best whose
-            # entry was evicted is caught by residency checks here and by
-            # lookup()'s revalidation at scheduling time.
+            # fused decide_batch launch at first entry (hit Top-1 through
+            # the policy's device-mirrored PolicyTable state); afterwards
+            # each waiting request only scores against entries admitted
+            # since the last pass (O(queue x new-admits), not O(queue x
+            # store)), keeping its running best-known top-1 in `peeked`.
+            # A stale best whose entry was evicted is caught by residency
+            # checks here and by lookup()'s revalidation at scheduling time.
             if queue and not peeked_once[0]:
                 peeked_once[0] = True
-                cids, sims = self.cache.peek_batch(
+                dec = self.cache.decide_batch(
                     np.stack([r.emb for r in queue]))
-                for req, c, s in zip(queue, cids, sims):
+                for req, c, s in zip(queue, dec.hit_cid, dec.hit_sim):
                     peeked[req.rid] = (int(c), float(s))
                 recent.clear()
                 drain_hits()

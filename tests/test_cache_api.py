@@ -394,5 +394,7 @@ def test_engine_has_no_inline_cache_logic():
     assert not hasattr(ServingEngine, "_admit")
     src = inspect.getsource(ServingEngine)
     assert "ResidentStore(" not in src and "RACPolicy(" not in src
-    # batched hot path: the whole queue is scored in one facade call
-    assert "peek_batch" in src
+    # batched hot path: the whole queue is scored in one fused facade
+    # launch, and rescans stay row-restricted through the backend
+    assert "decide_batch" in src
+    assert "peek_rows" in src

@@ -1,0 +1,220 @@
+"""The fused decision path: decide_batch parity across backends, the
+PolicyTable device mirrors (dirty-row sync against the mutation journals,
+including a missed-touch detector sweep), victim-value consistency with
+the policy's own scoring, and the shard_map fused variant."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cache import (CacheConfig, KernelBackend, NumpyBackend,
+                         SemanticCache)
+from repro.core import EmbeddingSpace, SynthConfig, synthetic_trace
+
+
+def _filled_rac(backend, n=48, capacity=40, dim=64, policy_kwargs=None,
+                **bkw):
+    space = EmbeddingSpace(dim=dim, seed=5)
+    cache = SemanticCache(CacheConfig(capacity=capacity, dim=dim,
+                                      backend=backend, policy="RAC",
+                                      use_pallas=False,
+                                      policy_kwargs=policy_kwargs or {},
+                                      backend_kwargs=bkw))
+    for i in range(n):
+        e = space.content_embedding(i % 6, i).astype(np.float32)
+        r = cache.lookup(e, cid=i)
+        if not r.hit:
+            cache.admit(i, e)
+    return cache, space
+
+
+def _queries(space, dim=64):
+    return np.stack(
+        [space.paraphrase(space.content_embedding(i % 6, i), i % 6, i, 1)
+         .astype(np.float32) for i in range(12)]
+        + [space.content_embedding(9, 900 + j).astype(np.float32)
+           for j in range(4)])
+
+
+def _assert_decisions_agree(cn, dn, cb, db, tau_route=0.65):
+    np.testing.assert_array_equal(dn.hit_cid, db.hit_cid)
+    np.testing.assert_allclose(dn.hit_sim, db.hit_sim, atol=1e-5)
+    # routing candidates agree as *decisions* (host masks retired topics to
+    # -inf, device zeroes their rep rows — identical once gated)
+    gn = np.where(dn.route_sim >= tau_route, dn.route_tid, -1)
+    gb = np.where(db.route_sim >= tau_route, db.route_tid, -1)
+    np.testing.assert_array_equal(gn, gb)
+    live = gn >= 0
+    np.testing.assert_allclose(dn.route_sim[live], db.route_sim[live],
+                               atol=1e-5)
+    # victim values agree per cid (slot layouts differ across stores)
+    cids = sorted(cn.store.slot_of)
+    assert cids == sorted(cb.store.slot_of)
+    vn = np.array([dn.victim_value[cn.store.slot_of[c]] for c in cids])
+    vb = np.array([db.victim_value[cb.store.slot_of[c]] for c in cids])
+    np.testing.assert_allclose(vn, vb, rtol=1e-5)
+    assert np.isinf(dn.victim_value[~cn.store.occ]).all()
+    assert np.isinf(db.victim_value[~cb.store.occ]).all()
+
+
+@pytest.mark.parametrize("backend,bkw", [("kernel", {}),
+                                         ("sharded", {"n_shards": 1}),
+                                         ("sharded", {"n_shards": 4})])
+def test_decide_batch_backend_parity(backend, bkw):
+    """Hit, routing, and victim columns of one fused launch agree with the
+    numpy host oracle after identical replays."""
+    cn, space = _filled_rac("numpy")
+    cb, _ = _filled_rac(backend, **bkw)
+    qs = _queries(space)
+    _assert_decisions_agree(cn, cn.decide_batch(qs), cb,
+                            cb.decide_batch(qs))
+
+
+def test_decide_batch_tableless_policy_degrades():
+    """Baseline policies have no PolicyTable: decide_batch still answers
+    hit Top-1 (== peek_batch) with sentinel routing/victim columns."""
+    space = EmbeddingSpace(dim=32, seed=1)
+    for backend in ("numpy", "kernel"):
+        cache = SemanticCache(CacheConfig(capacity=8, dim=32, policy="LRU",
+                                          backend=backend,
+                                          use_pallas=False))
+        for i in range(6):
+            cache.admit(i, space.content_embedding(0, i).astype(np.float32))
+        qs = np.stack([space.content_embedding(0, i).astype(np.float32)
+                       for i in range(4)])
+        dec = cache.decide_batch(qs)
+        pc, ps = cache.peek_batch(qs)
+        np.testing.assert_array_equal(dec.hit_cid, pc)
+        np.testing.assert_allclose(dec.hit_sim, ps, atol=1e-6)
+        assert dec.victim_value is None
+        assert (dec.route_tid == -1).all()
+        assert np.isneginf(dec.route_sim).all()
+
+
+def test_decide_victim_matches_value_scores_paper_mode():
+    """The fused victim column IS Eq.1-literal TP·TSI: it must equal the
+    policy's own value_scores under value_mode="paper"."""
+    cache, space = _filled_rac("numpy",
+                               policy_kwargs={"value_mode": "paper"})
+    t = cache.clock
+    dec = cache.decide_batch(_queries(space), t=t)
+    cids, vals = cache.policy.value_scores(t)
+    slots = [cache.store.slot_of[int(c)] for c in cids]
+    np.testing.assert_allclose(dec.victim_value[slots], vals, rtol=1e-5)
+
+
+def test_kernel_mirrors_stay_fresh_through_replay():
+    """Missed-touch detector: replay a mutation-heavy trace through the
+    kernel backend and, every few requests, check the device-mirrored
+    decision state against the numpy host oracle reading the same
+    store/table.  Any RACPolicy mutation that forgets to stamp a journal
+    row shows up here as a stale mirror."""
+    kb = KernelBackend(use_pallas=False)
+    nb = NumpyBackend()
+    trace = synthetic_trace(SynthConfig(trace_len=300, seed=4))
+    dim = trace.requests[0].emb.shape[0]
+    cache = SemanticCache(CacheConfig(capacity=20, dim=dim,
+                                      hit_mode="semantic", policy="RAC"),
+                          backend=kb)
+    probe = np.stack([r.emb for r in trace.requests[:8]])
+    alpha = cache.policy.alpha
+    for i, req in enumerate(trace.requests):
+        r = cache.lookup(req.emb, cid=req.cid, t=req.t, req=req)
+        if not r.hit:
+            cache.admit(req.cid, req.emb, t=req.t, req=req)
+        if i % 23 == 0:
+            dk = cache.decide_batch(probe)
+            dn = nb.decide_batch(cache.store, cache.policy.table, probe,
+                                 alpha=alpha, t_now=cache.clock)
+            np.testing.assert_array_equal(dk.hit_cid, dn.hit_cid)
+            occ = cache.store.occ
+            np.testing.assert_allclose(dk.victim_value[occ],
+                                       dn.victim_value[occ], rtol=1e-4)
+            assert np.isinf(dk.victim_value[~occ]).all()
+            gk = np.where(dk.route_sim >= 0.65, dk.route_tid, -1)
+            gn = np.where(dn.route_sim >= 0.65, dn.route_tid, -1)
+            np.testing.assert_array_equal(gk, gn)
+    stats = kb.sync_stats
+    # the whole point of the journals: steady state scatters dirty rows
+    # instead of re-uploading the slabs
+    assert stats["incremental"] > 0
+    assert stats["rows"] > 0
+
+
+def test_policy_table_journal_semantics():
+    """PolicyTable's two journals answer dirty-row queries independently
+    and refuse foreign versions, like the store journal they reuse."""
+    from repro.core.policy_table import PolicyTable
+    tb = PolicyTable(16, 8)
+    v_slot, v_topic = tb.slot_version, tb.topic_version
+    tb.freq[3] = 1.0
+    tb.touch_slot(3)
+    tb.set_rep(2, np.ones(8, dtype=np.float32))
+    assert tb.dirty_slots_since(v_slot) == {3}
+    assert tb.dirty_topics_since(v_topic) == {2}
+    assert tb.topic_hwm == 3
+    assert tb.dirty_slots_since(tb.slot_version) == set()
+    assert tb.dirty_slots_since(v_topic) is None        # foreign lineage
+    tb.clear_slot(3)
+    assert tb.dirty_slots_since(v_slot) == {3}
+    tb.clear_topic(2)
+    assert not tb.rep_valid[2] and not tb.rep[2].any()
+    # growth keeps hwm and reallocates every topic array together
+    tb.grow_topics(600)
+    assert (len(tb.tp_last) == len(tb.t_last) == len(tb.rep)
+            == len(tb.rep_valid) >= 601)
+
+
+def test_sharded_fused_decide_shard_map_in_subprocess():
+    """With enough devices the fused decision pass runs under shard_map
+    (per-shard sim_top1 + victim slices, all_gather argmax merge) and
+    agrees with the numpy oracle."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4").strip()
+import numpy as np
+from repro.cache import NumpyBackend, ShardedKernelBackend, ShardedStore
+from repro.core.policy_table import PolicyTable
+rng = np.random.default_rng(1)
+store = ShardedStore(300, 64, n_shards=4)
+table = PolicyTable(store.emb.shape[0], 64)
+embs = rng.standard_normal((200, 64)).astype(np.float32)
+embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+for i in range(200):
+    s = store.insert(i, embs[i])
+    table.tsi[s] = rng.random() * 10
+    table.topic_of[s] = int(rng.integers(0, 12))
+    table.touch_slot(s)
+for tid in range(12):
+    table.tp_last[tid] = rng.random() * 5
+    table.t_last[tid] = int(rng.integers(0, 400))
+    table.set_rep(tid, embs[tid])
+store.remove(7); store.remove(90)
+table.clear_slot(store.emb.shape[0] - 1)   # arbitrary stamped row
+q = rng.standard_normal((32, 64)).astype(np.float32)
+q /= np.linalg.norm(q, axis=1, keepdims=True)
+sb = ShardedKernelBackend(n_shards=4, use_pallas=False)
+assert sb.mesh() is not None, "mesh must be active with 4 devices"
+dn = NumpyBackend().decide_batch(store, table, q, alpha=0.001, t_now=500)
+ds = sb.decide_batch(store, table, q, alpha=0.001, t_now=500)
+np.testing.assert_array_equal(dn.hit_cid, ds.hit_cid)
+np.testing.assert_allclose(dn.hit_sim, ds.hit_sim, atol=1e-5)
+occ = store.occ
+np.testing.assert_allclose(dn.victim_value[occ], ds.victim_value[occ],
+                           rtol=1e-4)
+assert np.isinf(ds.victim_value[~occ]).all()
+gn = np.where(dn.route_sim >= 0.65, dn.route_tid, -1)
+gs = np.where(ds.route_sim >= 0.65, ds.route_tid, -1)
+np.testing.assert_array_equal(gn, gs)
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

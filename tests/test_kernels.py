@@ -130,3 +130,59 @@ def test_rac_value_matches_policy_scoring(rng):
         jnp.asarray(pol.t_last[:pol._next_tid + 1], jnp.int32),
         pol.alpha, t_now)
     np.testing.assert_allclose(np.asarray(dev_vals), host_vals, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,t", [(1, 1), (777, 33), (1024, 4), (2049, 100)])
+def test_victim_value(rng, n, t):
+    """The decision kernel (Pallas, interpret mode on CPU): occupancy-
+    masked Eq.1 with a runtime t_now matches the jnp oracle, including
+    free slots (tid -1 -> +inf) and t_now varying without re-dispatchable
+    shape changes."""
+    tsi = jnp.asarray(rng.random(n), jnp.float32)
+    tid = jnp.asarray(rng.integers(-1, t, n), jnp.int32)
+    occ = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    tp = jnp.asarray(rng.random(t) * 10, jnp.float32)
+    tl = jnp.asarray(rng.integers(0, 1000, t), jnp.int32)
+    for t_now in (1500, 2600):
+        r1 = ops.victim_value(tsi, tid, occ, tp, tl, t_now, alpha=0.001)
+        r2 = ref.victim_value_ref(tsi, tid, occ, tp, tl, t_now, 0.001)
+        np.testing.assert_allclose(r1, r2, atol=1e-5)
+        free = ~np.asarray(occ, dtype=bool)
+        assert np.isinf(np.asarray(r1)[free]).all()
+
+
+def test_victim_value_large_timestamps(rng):
+    """Absolute clocks past float32's 2^24 integer range must not skew the
+    decay: the kernel subtracts in int32 before casting the age."""
+    base = 1 << 25
+    tsi = jnp.ones(64, jnp.float32)
+    tid = jnp.zeros(64, jnp.int32)
+    occ = jnp.ones(64, jnp.int32)
+    tp = jnp.asarray([2.0], jnp.float32)
+    tl = jnp.asarray([base + 1], jnp.int32)          # age = 9 at t_now
+    r = ops.victim_value(tsi, tid, occ, tp, tl, base + 10, alpha=0.1)
+    np.testing.assert_allclose(r, 2.0 * 0.5 ** (0.1 * 9), rtol=1e-5)
+
+
+def test_fused_decide_composes_the_three_legs(rng):
+    """One fused dispatch (Pallas interpret mode) returns exactly what the
+    three oracle legs return: hit top-1, routing top-1, victim values."""
+    q = jnp.asarray(rng.standard_normal((13, 64)), jnp.float32)
+    slab = jnp.asarray(rng.standard_normal((300, 64)), jnp.float32)
+    reps = jnp.asarray(rng.standard_normal((40, 64)), jnp.float32)
+    tsi = jnp.asarray(rng.random(300), jnp.float32)
+    tid = jnp.asarray(rng.integers(-1, 40, 300), jnp.int32)
+    occ = jnp.asarray(rng.integers(0, 2, 300), jnp.int32)
+    tp = jnp.asarray(rng.random(40) * 5, jnp.float32)
+    tl = jnp.asarray(rng.integers(0, 500, 40), jnp.int32)
+    hv, hi, rv, ri, vv = ops.fused_decide(q, slab, 260, reps, 40, tsi, tid,
+                                          occ, tp, tl, 700, alpha=0.001)
+    ev, ei = ref.sim_top1_ref(q, slab, 260)
+    np.testing.assert_allclose(hv, ev, atol=1e-4)
+    np.testing.assert_array_equal(hi, ei)
+    ev, ei = ref.sim_top1_ref(q, reps, 40)
+    np.testing.assert_allclose(rv, ev, atol=1e-4)
+    np.testing.assert_array_equal(ri, ei)
+    np.testing.assert_allclose(
+        vv, ref.victim_value_ref(tsi, tid, occ, tp, tl, 700, 0.001),
+        atol=1e-5)

@@ -1,12 +1,15 @@
 """RAC policy unit tests: Def.1/Def.2 faithfulness, Alg.1-5 behavior,
-Example 1 (anchors survive topic switches), PageRank appendix."""
+Example 1 (anchors survive topic switches), ghost-metadata bounds,
+PageRank appendix (numpy oracle vs the wired jax device path)."""
 import numpy as np
 import pytest
 
 from repro.core import EmbeddingSpace, Request, pagerank_reversed
+from repro.core import structural
 from repro.core.policies import LRUPolicy
 from repro.core.rac import RACPolicy
 from repro.core.store import ResidentStore
+from repro.core.structural import pagerank_scores
 
 
 def _req(t, cid, emb):
@@ -191,6 +194,54 @@ def test_victim_determinism():
             assert order == first
 
 
+# --------------------------------------------------------- ghost bounds
+def test_ghost_limit_fifo_bound():
+    """The declared ghost_limit is a hard FIFO bound: a trace that evicts
+    3x the limit of distinct contents never grows g_freq/g_dep past it,
+    and the survivors are the most recently forgotten cids."""
+    limit = 64
+    cap = 4
+    store, pol = _mk(capacity=cap, tau_route=0.3, ghost_limit=limit)
+    space = EmbeddingSpace(dim=16, seed=11)
+    n = 3 * limit + cap
+    for t, cid in enumerate(range(n)):
+        emb = space.content_embedding(cid % 8, cid).astype(np.float32)
+        _arrive(store, pol, cid, emb, t + 1, cap)
+        assert len(pol.g_freq) <= limit
+        assert len(pol.g_dep) <= limit
+        assert set(pol.g_dep) == set(pol.g_freq)
+    assert len(pol.g_freq) > 0
+    # FIFO: every surviving ghost is newer than every dropped one
+    assert min(pol.g_freq) > 0
+
+
+def test_ghost_limit_tiny_limits_stay_bounded():
+    """Degenerate limits (smaller than the drop batch) still bound."""
+    for limit in (0, 1, 3):
+        store, pol = _mk(capacity=2, tau_route=0.3, ghost_limit=limit)
+        space = EmbeddingSpace(dim=16, seed=12)
+        for t, cid in enumerate(range(24)):
+            emb = space.content_embedding(cid % 4, cid).astype(np.float32)
+            _arrive(store, pol, cid, emb, t + 1, 2)
+            assert len(pol.g_freq) <= limit
+            assert len(pol.g_dep) <= limit
+
+
+def test_ghost_restore_still_works_under_limit():
+    """A ghost inside the bound still restores its lifetime counters."""
+    store, pol = _mk(capacity=2, tau_route=0.3, ghost_limit=8)
+    space = EmbeddingSpace(dim=16, seed=13)
+    e = {i: space.content_embedding(i, i).astype(np.float32)
+         for i in range(4)}
+    for t, cid in enumerate([0, 0, 0]):             # freq(0) = 3
+        _arrive(store, pol, cid, e[cid], t + 1, 2)
+    pol._forget(0)
+    store.remove(0)
+    assert pol.g_freq[0] == 3.0
+    _arrive(store, pol, 0, e[0], 10, 2)
+    assert pol.freq[store.slot_of[0]] == 4.0
+
+
 # ------------------------------------------------------------- pagerank
 def test_pagerank_matches_linear_solve(rng):
     n = 7
@@ -214,9 +265,54 @@ def test_pagerank_matches_linear_solve(rng):
     assert r[0] == r.max()
 
 
-def test_rac_pagerank_mode_runs():
+def test_pagerank_power_jax_matches_oracle_on_random_dags(rng):
+    """Parity of the wired device path: pagerank_scores(device=True) runs
+    the jax power iteration and must agree with the pagerank_reversed
+    numpy oracle on random DAGs (edges u->v with u < v, so acyclic)."""
+    for _ in range(5):
+        n = int(rng.integers(3, 24))
+        edges = [(u, v) for v in range(1, n) for u in range(v)
+                 if rng.random() < 0.3]
+        r_np = pagerank_reversed(edges, n)
+        r_jx = pagerank_scores(edges, n, device=True)
+        assert r_jx.shape == (n,)
+        np.testing.assert_allclose(r_jx, r_np, atol=2e-5)
+        assert r_jx.sum() == pytest.approx(1.0, abs=1e-4)
+
+
+def test_pagerank_scores_host_engine_is_oracle():
+    edges = [(0, 1), (0, 2), (1, 3)]
+    np.testing.assert_array_equal(pagerank_scores(edges, 4, device=False),
+                                  pagerank_reversed(edges, 4))
+
+
+def test_rac_pagerank_mode_runs_on_device_path(monkeypatch):
+    """structural_mode="pagerank" drives refreshes through the jax power
+    iteration by default (the formerly dead device path)."""
+    calls = {"device": 0}
+    orig = structural.pagerank_scores
+
+    def spy(edges, n, beta=0.85, device=False, iters=128):
+        calls["device"] += bool(device)
+        return orig(edges, n, beta=beta, device=device, iters=iters)
+
+    monkeypatch.setattr(structural, "pagerank_scores", spy)
     store, pol = _mk(capacity=8, dim=32, structural_mode="pagerank",
                      pagerank_every=1, tau_route=0.5)
+    space = EmbeddingSpace(dim=32, seed=9)
+    for t, cid in enumerate(range(12)):
+        emb = space.content_embedding(0, cid,
+                                      parent_content=0 if cid else -1)
+        _arrive(store, pol, cid, emb.astype(np.float32), t + 1, 8)
+    assert len(store) <= 8
+    assert calls["device"] > 0
+
+
+def test_rac_pagerank_oracle_engine_still_available():
+    """structural_device=False keeps the numpy oracle engine selectable."""
+    store, pol = _mk(capacity=8, dim=32, structural_mode="pagerank",
+                     structural_device=False, pagerank_every=1,
+                     tau_route=0.5)
     space = EmbeddingSpace(dim=32, seed=9)
     for t, cid in enumerate(range(12)):
         emb = space.content_embedding(0, cid,

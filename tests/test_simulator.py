@@ -1,11 +1,12 @@
 """Simulator-level invariants promised by core/simulator.py: the two hit
-modes agree under the synthetic embedding geometry, and the batched fast
-path matches the exact replayer."""
+modes agree under the synthetic embedding geometry, and the batched replay
+is EXACT — bit-identical hit/miss/eviction counts to the one-at-a-time
+replayer across hit modes, chunk sizes, and backends."""
 import numpy as np
 import pytest
 
-from repro.core import (SynthConfig, run_policy, run_policy_batched,
-                        synthetic_trace)
+from repro.core import (SynthConfig, run_many, run_policy,
+                        run_policy_batched, synthetic_trace)
 from repro.core.policies import LRUPolicy
 from repro.core.rac import make_rac
 
@@ -13,6 +14,11 @@ from repro.core.rac import make_rac
 @pytest.fixture(scope="module")
 def trace():
     return synthetic_trace(SynthConfig(trace_len=1500, seed=8))
+
+
+@pytest.fixture(scope="module")
+def trace_short():
+    return synthetic_trace(SynthConfig(trace_len=600, seed=3))
 
 
 def test_content_semantic_hit_mode_agreement(trace):
@@ -40,14 +46,46 @@ def test_batched_chunk1_is_exact(trace):
            (s_exact.hits, s_exact.misses, s_exact.evictions)
 
 
-def test_batched_large_chunk_close(trace):
-    """Snapshot batching only misses same-chunk admissions: the hit ratio
-    stays close to exact replay and capacity is never violated."""
+def test_batched_large_chunk_exact(trace):
+    """The incremental rescore closes the historical snapshot gap: a large
+    chunk is bit-identical to exact replay, not merely close."""
     s_exact = run_policy(trace, 100, make_rac(), hit_mode="semantic")
     s_b = run_policy_batched(trace, 100, make_rac(), hit_mode="semantic",
                              chunk=128)
-    assert s_b.hits + s_b.misses == len(trace.requests)
-    assert abs(s_b.hit_ratio - s_exact.hit_ratio) < 0.1
+    assert (s_b.hits, s_b.misses, s_b.evictions) == \
+           (s_exact.hits, s_exact.misses, s_exact.evictions)
+
+
+# --------------------------------------------------- exact-replay matrix
+@pytest.fixture(scope="module")
+def exact_ref(trace_short):
+    """run_policy reference counts, cached per (backend, hit_mode)."""
+    memo = {}
+
+    def get(backend, hit_mode):
+        key = (backend, hit_mode)
+        if key not in memo:
+            s = run_policy(trace_short, 60, make_rac(), hit_mode=hit_mode,
+                           backend=backend, use_pallas=False)
+            memo[key] = (s.hits, s.misses, s.evictions)
+        return memo[key]
+
+    return get
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel", "sharded"])
+@pytest.mark.parametrize("hit_mode", ["content", "semantic"])
+@pytest.mark.parametrize("chunk", [1, 7, 512])
+def test_batched_replay_exact_matrix(trace_short, exact_ref, backend,
+                                     hit_mode, chunk):
+    """The PR acceptance matrix: run_policy_batched is bit-identical to
+    run_policy across hit modes x chunk sizes x backends (RAC policy —
+    eviction trajectories must agree too, not just hits)."""
+    ref = exact_ref(backend, hit_mode)
+    s = run_policy_batched(trace_short, 60, make_rac(), hit_mode=hit_mode,
+                           backend=backend, chunk=chunk, use_pallas=False)
+    assert (s.hits, s.misses, s.evictions) == ref
+    assert s.hits + s.misses == len(trace_short.requests)
 
 
 def test_batched_content_mode_delegates(trace):
@@ -57,3 +95,15 @@ def test_batched_content_mode_delegates(trace):
                              hit_mode="content", chunk=64)
     assert (s_b.hits, s_b.misses, s_b.evictions) == \
            (s_exact.hits, s_exact.misses, s_exact.evictions)
+
+
+def test_run_many_forwards_batched(trace_short):
+    """run_many(batched=True) routes through run_policy_batched (and
+    forwards chunk=); with the exact replay the counts match run_policy."""
+    facs = {"LRU": lambda c, st: LRUPolicy(c, st), "RAC": make_rac()}
+    plain = run_many(trace_short, 60, facs, hit_mode="semantic")
+    batched = run_many(trace_short, 60, facs, batched=True,
+                       hit_mode="semantic", chunk=64)
+    for a, b in zip(plain, batched):
+        assert (a.hits, a.misses, a.evictions) == \
+               (b.hits, b.misses, b.evictions)
