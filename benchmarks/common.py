@@ -13,33 +13,52 @@ import time
 import numpy as np
 
 from repro.core import (OASSTConfig, SynthConfig, default_factories,
-                        oasst_style_trace, run_policy, run_policy_batched,
-                        synthetic_trace)
+                        oasst_style_trace, run_many, run_policy,
+                        run_policy_batched, synthetic_trace)
 
 OUT_DIR = os.environ.get("BENCH_OUT", "bench_results")
 N_SEEDS = int(os.environ.get("BENCH_SEEDS", "3"))
 TRACE_LEN = int(os.environ.get("BENCH_TRACE_LEN", "10000"))
+# one-pass multi-policy arena (decisions are bit-identical to the
+# sequential replays); BENCH_ARENA=0 restores the per-policy loop
+USE_ARENA = os.environ.get("BENCH_ARENA", "1") != "0"
 
 PAPER_BASELINES = ["FIFO", "LRU", "CLOCK", "TTL", "TinyLFU", "ARC",
                    "S3-FIFO", "SIEVE", "2Q", "LHD", "LeCaR"]
 
 
-def factories(include_belady=True):
-    return default_factories(include_belady=include_belady)
+def factories(include_belady=True, seed=None):
+    return default_factories(include_belady=include_belady, seed=seed)
 
 
 def run_setting(trace, capacity, facs, hit_mode="content",
                 backend="numpy", batched=False, chunk=512,
-                use_pallas=True):
+                use_pallas=True, arena=None, seed=None):
+    """Run every factory under one setting -> {name: Stats}.
+
+    ``arena=None`` defers to the ``BENCH_ARENA`` env toggle (default on):
+    the whole dict replays in ONE trace pass through
+    :func:`repro.core.arena.run_arena`.  Sequential mode honors
+    ``batched=True`` for BOTH hit modes — content-mode runs route through
+    ``run_policy_batched`` as well (it delegates internally), so the flag
+    is never silently dropped."""
+    if arena is None:
+        arena = USE_ARENA
+    if arena:
+        stats = run_many(trace, capacity, facs, arena=True,
+                         hit_mode=hit_mode, backend=backend, chunk=chunk,
+                         use_pallas=use_pallas, seed=seed)
+        return dict(zip(facs.keys(), stats))
     out = {}
     for name, f in facs.items():
-        if batched and hit_mode == "semantic":
+        if batched:
             s = run_policy_batched(trace, capacity, f, name=name,
                                    hit_mode=hit_mode, backend=backend,
-                                   chunk=chunk, use_pallas=use_pallas)
+                                   chunk=chunk, use_pallas=use_pallas,
+                                   seed=seed)
         else:
             s = run_policy(trace, capacity, f, name=name, hit_mode=hit_mode,
-                           backend=backend, use_pallas=use_pallas)
+                           backend=backend, use_pallas=use_pallas, seed=seed)
         out[name] = s
     return out
 

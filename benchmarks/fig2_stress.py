@@ -4,13 +4,24 @@
 (b) Zipf exponent sweep γ ∈ {0.7..1.2}  (long-reuse 50% fixed)
 
 Capacity 10% of the unique footprint (paper §4.2 RQ1 configuration).
+All policies replay through the one-pass multi-policy arena (bit-identical
+decisions to sequential replay; ``BENCH_ARENA=0`` reverts).
+
+``--smoke``: tiny trace (1500 requests), 2 seeds — the CI configuration.
 """
 from __future__ import annotations
+
+import sys
 
 from repro.core import SynthConfig, synthetic_trace
 
 from .common import (N_SEEDS, TRACE_LEN, Timer, agg, emit, factories,
                      gains, run_setting, save_json)
+
+# smallest length where the long-reuse arm actually fires (shorter traces
+# are identical across the ratio sweep, which defeats the smoke's purpose)
+SMOKE_TRACE_LEN = 1500
+SMOKE_SEEDS = 2
 
 
 def reuse_distance(trace_len=None, seeds=None):
@@ -43,21 +54,26 @@ def zipf_skew(trace_len=None, seeds=None):
     return results
 
 
-def main():
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    tl = SMOKE_TRACE_LEN if smoke else None
+    seeds = SMOKE_SEEDS if smoke else None
+    suffix = "_smoke" if smoke else ""
     with Timer() as t:
-        ra = reuse_distance()
+        ra = reuse_distance(trace_len=tl, seeds=seeds)
     for k, v in ra.items():
         emit(f"fig2a/{k}", t.us / len(ra),
              f"rac={v['rac']:.4f} best={v['best_baseline']:.4f} "
              f"gain={100*v['gain_vs_best']:+.1f}%")
-    save_json("fig2a.json", ra)
+    save_json(f"fig2a{suffix}.json", ra)
     with Timer() as t:
-        rb = zipf_skew()
+        rb = zipf_skew(trace_len=tl, seeds=seeds)
     for k, v in rb.items():
         emit(f"fig2b/{k}", t.us / len(rb),
              f"rac={v['rac']:.4f} best={v['best_baseline']:.4f} "
              f"gain={100*v['gain_vs_best']:+.1f}%")
-    save_json("fig2b.json", rb)
+    save_json(f"fig2b{suffix}.json", rb)
     return {"fig2a": ra, "fig2b": rb}
 
 

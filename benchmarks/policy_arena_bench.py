@@ -1,0 +1,146 @@
+"""Multi-policy arena vs sequential per-policy replay (the fig-suite sweep).
+
+Replays one 50k-request synthetic trace through the paper's 11-baseline
+policy set (§4.2 — the exact configuration the fig2/fig3 sweeps run), at
+the paper's standard capacity points (2.5% / 10% / 20% of the unique
+footprint, the fig3 axis), two ways:
+
+  - **sequential**: the pre-arena protocol — one full ``run_policy`` pass
+    per policy over the retained legacy host-loop baselines
+    (``repro.core.legacy_policies``), the historical figure-suite cost;
+  - **arena**: ONE pass through ``repro.core.arena.run_arena`` — the
+    array-state policies share the trace walk, the chunk embedding stack,
+    and (in semantic mode) a single policy-stacked Top-1 snapshot launch
+    per chunk.
+
+Hit/miss/eviction counts are asserted bit-identical between the two paths
+for every policy before any number is reported, so the speedup is never a
+decision drift in disguise.  ``--smoke`` runs the content-mode 50k sweep
+at the 10% and 20% capacity points and asserts the AGGREGATE arena
+throughput (total sequential wall / total arena wall) is >= 3x (the PR
+acceptance bar; the arena side is measured best-of-2 so a transient
+scheduler stall cannot fail the cheap measurement).  The full mode adds
+the 2.5% capacity point, the semantic-mode sweep, and a chunk sweep,
+writing ``bench_results/policy_arena_bench.json``.
+
+    PYTHONPATH=src python -m benchmarks.policy_arena_bench [--smoke]
+
+Env knobs: ARENA_TRACE_LEN (default 50000).
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import sys
+import time
+
+from repro.core import SynthConfig, run_many, synthetic_trace
+from repro.core.legacy_policies import LEGACY_BASELINES
+from repro.core.policies import BASELINES
+
+from .common import PAPER_BASELINES, emit, save_json
+
+TRACE_LEN = int(os.environ.get("ARENA_TRACE_LEN", "50000"))
+CAP_FRACS = (0.025, 0.10, 0.20)     # fig3's capacity axis
+SMOKE_FRACS = (0.10, 0.20)
+SPEEDUP_FLOOR = 3.0                 # asserted in smoke mode (PR acceptance)
+
+
+def _facs(registry, names, seed=0):
+    out = {}
+    for n in names:
+        cls = registry[n]
+        takes_seed = "seed" in inspect.signature(cls.__init__).parameters
+
+        def f(cap, store, seed=seed, _c=cls, _s=takes_seed):
+            return _c(cap, store, **({"seed": seed} if _s else {}))
+
+        f.__name__ = n
+        out[n] = f
+    return out
+
+
+def _counts(stats):
+    return [(s.policy, s.hits, s.misses, s.evictions) for s in stats]
+
+
+def sweep(hit_mode: str, cap_frac: float = 0.10, chunk: int = 512,
+          names=None, arena_reps: int = 1) -> dict:
+    """One sequential-vs-arena comparison; returns the result record.
+    ``arena_reps`` takes best-of-N on the (cheap) arena side so a noisy
+    scheduler can't fail the smoke assert on the cheap measurement."""
+    names = names or PAPER_BASELINES
+    tr = synthetic_trace(SynthConfig(trace_len=TRACE_LEN, seed=0))
+    cap = max(8, int(cap_frac * tr.meta["unique"]))
+    leg = _facs(LEGACY_BASELINES, names)
+    arr = _facs(BASELINES, names)
+
+    t_arena = float("inf")
+    for _ in range(max(1, arena_reps)):
+        t0 = time.perf_counter()
+        arena = run_many(tr, cap, arr, arena=True, hit_mode=hit_mode,
+                         chunk=chunk, use_pallas=False)
+        t_arena = min(t_arena, time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    seq = run_many(tr, cap, leg, hit_mode=hit_mode, use_pallas=False)
+    t_seq = time.perf_counter() - t0
+
+    # the speedup only counts if the decisions are the same decisions
+    assert _counts(seq) == _counts(arena), (
+        f"arena decisions diverged from sequential replay ({hit_mode})")
+
+    n_req = len(tr.requests) * len(names)
+    return {
+        "hit_mode": hit_mode, "chunk": chunk, "policies": names,
+        "trace_len": TRACE_LEN, "capacity": cap, "cap_frac": cap_frac,
+        "seq_s": t_seq, "arena_s": t_arena,
+        "speedup": t_seq / t_arena,
+        "seq_us_per_req": 1e6 * t_seq / n_req,
+        "arena_us_per_req": 1e6 * t_arena / n_req,
+        "hit_ratio": {s.policy: s.hit_ratio for s in arena},
+    }
+
+
+def main(argv=None) -> dict:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    results = {}
+
+    fracs = SMOKE_FRACS if smoke else CAP_FRACS
+    for frac in fracs:
+        r = sweep("content", cap_frac=frac, arena_reps=2 if smoke else 1)
+        results[f"content_cap{frac}"] = r
+        emit(f"arena/content_cap{frac}", r["arena_us_per_req"],
+             f"seq={r['seq_s']:.1f}s arena={r['arena_s']:.1f}s "
+             f"speedup={r['speedup']:.2f}x (counts identical)")
+    if smoke:
+        seq = sum(results[f"content_cap{f}"]["seq_s"] for f in fracs)
+        arena = sum(results[f"content_cap{f}"]["arena_s"] for f in fracs)
+        results["aggregate_speedup"] = seq / arena
+        emit("arena/aggregate", 0.0, f"speedup={seq / arena:.2f}x")
+        assert seq / arena >= SPEEDUP_FLOOR, (
+            f"aggregate arena speedup {seq / arena:.2f}x below the "
+            f"{SPEEDUP_FLOOR}x acceptance floor on the {TRACE_LEN}-request "
+            f"multi-policy sweep")
+        save_json("policy_arena_bench_smoke.json", results)
+        return results
+
+    r = sweep("semantic")
+    results["semantic"] = r
+    emit("arena/semantic", r["arena_us_per_req"],
+         f"seq={r['seq_s']:.1f}s arena={r['arena_s']:.1f}s "
+         f"speedup={r['speedup']:.2f}x (counts identical)")
+
+    for chunk in (64, 2048):
+        r = sweep("semantic", chunk=chunk)
+        results[f"semantic_chunk{chunk}"] = r
+        emit(f"arena/semantic_chunk{chunk}", r["arena_us_per_req"],
+             f"speedup={r['speedup']:.2f}x")
+
+    save_json("policy_arena_bench.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Full result tables land in
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig2 fig4  # subset
-Env knobs: BENCH_SEEDS (default 3), BENCH_TRACE_LEN (default 10000).
+    PYTHONPATH=src python -m benchmarks.run --list     # registered names
+Env knobs: BENCH_SEEDS (default 3), BENCH_TRACE_LEN (default 10000),
+BENCH_ARENA (default 1: fig sweeps run the one-pass multi-policy arena).
 """
 from __future__ import annotations
 
@@ -13,12 +15,12 @@ import sys
 
 from . import (cache_api_bench, decision_path_bench, faithfulness,
                fig1_example, fig2_stress, fig3_real, fig4_ablation,
-               fig5_sensitivity, kernel_bench, overhead, roofline,
-               serving_async_bench, sharded_lookup_bench)
+               fig5_sensitivity, kernel_bench, overhead, policy_arena_bench,
+               roofline, serving_async_bench, sharded_lookup_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
-    "fig2": fig2_stress.main,      # stress axes (paper Fig. 2a/2b)
+    "fig2": lambda: fig2_stress.main([]),  # stress axes (paper Fig. 2a/2b)
     "fig3": fig3_real.main,        # OASST-style capacities (Fig. 3)
     "fig4": fig4_ablation.main,    # TP/TSI ablation (Fig. 4)
     "fig5": fig5_sensitivity.main,  # parameter sensitivity (Fig. 5)
@@ -30,11 +32,17 @@ SUITES = {
     "sharded": lambda: sharded_lookup_bench.main([]),  # multi-device lookup
     "serving_async": lambda: serving_async_bench.main([]),  # admit slot stall
     "decision": lambda: decision_path_bench.main([]),  # fused vs per-request
+    "arena": lambda: policy_arena_bench.main([]),  # multi-policy one-pass
 }
 
 
 def main() -> None:
-    picks = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    argv = sys.argv[1:]
+    if "--list" in argv:
+        for name in SUITES:
+            print(name)
+        return
+    picks = [a for a in argv if a in SUITES] or list(SUITES)
     print("name,us_per_call,derived")
     for name in picks:
         SUITES[name]()

@@ -102,6 +102,34 @@ class LookupBackend(Protocol):
         ``table=None`` (baseline policies) degrades to hit Top-1 only."""
         ...
 
+    def top1_multi(self, arena, queries: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Policy-stacked Top-1 over an :class:`~repro.core.arena.
+        ArenaStore`'s (P, S, D) slab — the multi-policy arena's snapshot
+        scoring surface.  Returns ((P, B) cids, (P, B) sims); each row is
+        exactly the answer :meth:`top1_batch` would give for that policy's
+        store view."""
+        ...
+
+
+def small_delta(n_dirty: int, n_rows: int) -> bool:
+    """The shared dirty-row sync policy: a delta this small is worth a
+    device scatter; anything bigger re-uploads in full.  One definition
+    for every mirror (``_DeviceMirror``, the sharded slab caches), so the
+    threshold can never drift between copies."""
+    return n_dirty <= max(64, n_rows // 4)
+
+
+def bucket_rows(rows: np.ndarray, bucket: int = 64) -> np.ndarray:
+    """Pad a sorted dirty-row index vector to a ``bucket`` multiple by
+    repeating the last row (re-setting a row to the same value is a
+    no-op), so XLA compiles one scatter per bucket, not one per distinct
+    dirty count.  Shared by every dirty-row scatter path."""
+    pad = (-len(rows)) % bucket
+    if pad:
+        rows = np.pad(rows, (0, pad), mode="edge")
+    return rows
+
 
 class _DeviceMirror:
     """Device copy of equally-row-indexed host arrays, kept fresh by
@@ -131,16 +159,11 @@ class _DeviceMirror:
                 self.arrays[k].shape == v.shape for k, v in host.items()):
             dirty = dirty_since(self.version)
         n_rows = next(iter(host.values())).shape[0]
-        if dirty is not None and len(dirty) <= max(64, n_rows // 4):
+        if dirty is not None and small_delta(len(dirty), n_rows):
             if dirty:
-                rows = np.fromiter(sorted(dirty), dtype=np.int64,
-                                   count=len(dirty))
-                # pad to a bucket of 64 by repeating the last dirty row
-                # (re-setting a row to the same value is a no-op) so XLA
-                # compiles one scatter per bucket, not per distinct count
-                pad = (-len(rows)) % 64
-                if pad:
-                    rows = np.pad(rows, (0, pad), mode="edge")
+                rows = bucket_rows(np.fromiter(sorted(dirty),
+                                               dtype=np.int64,
+                                               count=len(dirty)))
                 self.arrays = {
                     k: self.arrays[k].at[rows].set(
                         np.asarray(v[rows], dtype=self.dtypes[k]))
@@ -185,6 +208,27 @@ class NumpyBackend:
         b = np.arange(queries.shape[0])
         return (store.cid[rows[best]].copy(),
                 sims[b, best].astype(np.float64))
+
+    def top1_multi(self, arena, queries: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Host stacked pass: ONE (B, P*S) gemm scores the chunk against
+        every policy's slab.  Free slots hold zero embeddings, so instead
+        of masking, a zero row that wins maps to cid -1 → ``-inf`` — the
+        same *decision* the masked per-view scan makes (a zero can only
+        win when every real similarity is negative, far below any sensible
+        ``tau_hit``); gate-adjacent outcomes are re-scored by the
+        reference engine via the arena's epsilon flags."""
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        n_pol, n_slots = arena.occ.shape
+        flat = arena.emb.reshape(n_pol * n_slots, -1)
+        sims3 = (queries @ flat.T).reshape(b, n_pol, n_slots)
+        idx = sims3.argmax(axis=2)                        # (B, P)
+        vals = np.take_along_axis(sims3, idx[:, :, None],
+                                  axis=2)[:, :, 0]        # (B, P)
+        cids = arena.cid[np.arange(n_pol)[None, :], idx].T.copy()
+        sims = np.where(cids >= 0, vals.T.astype(np.float64), -np.inf)
+        return cids, sims
 
     def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
         decay = 0.5 ** (alpha * (t_now - t_last[tids]))
@@ -252,6 +296,8 @@ class KernelBackend:
         self._topic_mirror = _DeviceMirror({"rep": np.float32,
                                             "tp": np.float32,
                                             "tl": np.int32})
+        # the arena's stacked (P*S, D) slab, synced against its flat journal
+        self._arena_mirror = _DeviceMirror({"emb": np.float32})
 
     @property
     def sync_stats(self) -> dict:
@@ -308,6 +354,42 @@ class KernelBackend:
         vals = np.asarray(vals[:b], dtype=np.float64)
         idx = np.asarray(idx[:b])
         return store.cid[rows[idx]].copy(), vals
+
+    def top1_multi(self, arena, queries: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Stacked device pass: ONE ``sim_top1_multi`` dispatch scores the
+        query chunk against all P policy slabs, each masked to its own
+        runtime high-water mark.  The (P*S, D) flat slab is mirrored
+        against the arena's flat journal (dirty-row scatter), so
+        steady-state chunks move O(mutations) rows for the whole arena."""
+        from repro.kernels import ops                  # deferred: jax import
+        if not arena.track_rows:
+            # host-only arenas skip journaling entirely; a version-keyed
+            # mirror would silently serve stale rows
+            raise ValueError("KernelBackend.top1_multi needs an ArenaStore "
+                             "built with track_rows=True")
+        queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        n_pol, n_slots = arena.occ.shape
+        if not any(v.slot_of for v in arena.views):
+            return (np.full((n_pol, b), -1, dtype=np.int64),
+                    np.full((n_pol, b), -np.inf, dtype=np.float64))
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        dim = arena.emb.shape[-1]
+        dev = self._arena_mirror.sync(
+            arena.version, arena.dirty_since,
+            lambda: {"emb": arena.emb.reshape(n_pol * n_slots, dim)})
+        vals, idx = ops.sim_top1_multi(
+            qp, dev["emb"].reshape(n_pol, n_slots, dim),
+            n_valid=arena.hwms(), use_pallas=self.use_pallas,
+            interpret=self.interpret)
+        vals = np.asarray(vals[:, :b], dtype=np.float64)
+        idx = np.asarray(idx[:, :b])
+        cids = arena.cid[np.arange(n_pol)[:, None], idx].copy()
+        # a free (zeroed) slot can only win when all real sims < 0 → miss
+        sims = np.where(cids >= 0, vals, -np.inf)
+        return cids, sims
 
     def rac_value_masked(self, tsi, tids, tp_last, t_last, alpha, t_now,
                          valid):

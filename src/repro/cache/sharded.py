@@ -112,6 +112,9 @@ class ShardedKernelBackend:
         self._mesh = None
         self._mesh_built = False
         self._lookup_fn = None
+        self._multi_fn = None                      # arena stacked lookup
+        self._arena_cache = None       # (version, rearranged slab, shape)
+        self._arena_scatter_fn = None
         self._rac_fns: dict[float, object] = {}
         self._decide_fns: dict[float, object] = {}
         self._slab_cache: dict[int, tuple] = {}    # store.version -> (slab, nv)
@@ -197,17 +200,13 @@ class ShardedKernelBackend:
         if best is None:
             return None
         dirty, slab = best
-        if len(dirty) > max(64, store.emb.shape[0] // 4):
+        from .backends import bucket_rows, small_delta
+        if not small_delta(len(dirty), store.emb.shape[0]):
             return None                  # not worth a scatter: bulk upload
         if not dirty:
             return slab
-        slots = np.fromiter(sorted(dirty), dtype=np.int64, count=len(dirty))
-        # pad to a bucket of 64 by repeating the last dirty slot (writing
-        # the same row/value twice is a no-op under .set) so XLA compiles
-        # one scatter per bucket, not one per distinct dirty count
-        pad = (-len(slots)) % 64
-        if pad:
-            slots = np.pad(slots, (0, pad), mode="edge")
+        slots = bucket_rows(np.fromiter(sorted(dirty), dtype=np.int64,
+                                        count=len(dirty)))
         if self._scatter_fn is None:
             self._scatter_fn = self._build_scatter()
         self.sync_stats["incremental"] += 1
@@ -284,6 +283,178 @@ class ShardedKernelBackend:
         cids = store.cid[gslot].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
         sims = np.where(cids >= 0, vals, -np.inf)
+        return cids, sims
+
+    # ------------------------------------------------- multi-policy arena
+    def _build_arena_scatter(self):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = NamedSharding(self._mesh, P("cache"))
+
+        def scatter(slab, sh, ps, loc, vals):
+            return slab.at[sh, ps, loc].set(vals)
+
+        return jax.jit(scatter, out_shardings=spec)
+
+    def _arena_slab(self, arena, rows: int):
+        """(n_shards, P, R, D) rearranged stacked slab, version-keyed
+        against the arena's flat journal: the mesh path keeps a device
+        copy freshened by dirty-row scatter, the host fallback a
+        rearranged host copy patched in place — steady-state chunks move
+        O(mutations) rows, exactly like the single-policy ``_slab``."""
+        import numpy as _np
+
+        from .backends import bucket_rows, small_delta
+        n_pol, n_slots = arena.occ.shape
+        dim = arena.emb.shape[-1]
+        shape_key = (n_pol, rows, dim)
+        cached = self._arena_cache
+        if cached is not None and cached[2] == shape_key:
+            if cached[0] == arena.version:
+                return cached[1]
+            dirty = arena.dirty_since(cached[0])
+            if dirty is not None and small_delta(len(dirty),
+                                                 n_pol * n_slots):
+                slab = cached[1]
+                if dirty:
+                    flat = _np.fromiter(sorted(dirty), dtype=_np.int64,
+                                        count=len(dirty))
+                    self.sync_stats["incremental"] += 1
+                    self.sync_stats["rows"] += len(dirty)
+                    if self.mesh() is not None:
+                        flat = bucket_rows(flat)
+                        ps = flat // n_slots
+                        slot = flat % n_slots
+                        if self._arena_scatter_fn is None:
+                            self._arena_scatter_fn = \
+                                self._build_arena_scatter()
+                        slab = self._arena_scatter_fn(
+                            slab, (slot // rows).astype(_np.int32),
+                            ps.astype(_np.int32),
+                            (slot % rows).astype(_np.int32),
+                            arena.emb[ps, slot])
+                    else:
+                        ps = flat // n_slots
+                        slot = flat % n_slots
+                        slab[slot // rows, ps, slot % rows] = \
+                            arena.emb[ps, slot]
+                self._arena_cache = (arena.version, slab, shape_key)
+                return slab
+        # full (re)build: pad the slot axis and rearrange shard-major
+        s = self.n_shards
+        tail = rows * s - n_slots
+        emb = arena.emb
+        if tail:
+            emb = _np.concatenate(
+                [emb, _np.zeros((n_pol, tail, dim), _np.float32)], axis=1)
+        slab = _np.ascontiguousarray(
+            emb.reshape(n_pol, s, rows, dim).transpose(1, 0, 2, 3))
+        self.sync_stats["full"] += 1
+        if self.mesh() is not None:
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            slab = jax.device_put(slab, NamedSharding(self._mesh,
+                                                      P("cache")))
+        self._arena_cache = (arena.version, slab, shape_key)
+        return slab
+
+    def _build_multi_lookup(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels.ops import sim_top1_multi_raw
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def local_multi(q, slab, nv):
+            # q (B, D) replicated; slab (1, P, R, D) / nv (1, P) = this
+            # shard's slice of every policy's slab
+            vals, idx = sim_top1_multi_raw(q, slab[0], nv[0],
+                                           use_pallas=use_pallas,
+                                           interpret=interpret)
+            gv = jax.lax.all_gather(vals, "cache")         # (S, P, B)
+            gi = jax.lax.all_gather(idx, "cache")          # (S, P, B)
+            win = jnp.argmax(gv, axis=0)   # ONE argmax-reduce over shards
+            p = jnp.arange(gv.shape[1])[:, None]
+            b = jnp.arange(gv.shape[2])[None, :]
+            return gv[win, p, b], win.astype(jnp.int32), gi[win, p, b]
+
+        return jax.jit(shard_map(
+            local_multi, mesh=self._mesh,
+            in_specs=(P(), P("cache"), P("cache")),
+            out_specs=(P(), P(), P()), check_rep=False))
+
+    def top1_multi(self, arena, queries: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Policy-stacked Top-1 with the shard_map merge.
+
+        The arena's dense (P, S, D) slab is row-partitioned over the cache
+        mesh along the SLOT axis — each device holds every policy's slice
+        of R rows as (P, R, D) — and runs the stacked per-shard kernel
+        (``sim_top1_multi_raw``); the per-(policy, query) candidates are
+        all-gathered and merged by the same single argmax-reduce as
+        ``top1_batch``.  Per-shard valid counts derive from each policy's
+        dense high-water mark (LIFO slot reuse keeps occupied slots below
+        it), so free tails are never scored.  With too few devices the
+        identical per-shard math runs as a host loop."""
+        import numpy as _np
+        if not arena.track_rows:
+            # the version-keyed slab cache syncs against the arena's flat
+            # journal; a host-only arena never stamps it
+            raise ValueError("ShardedKernelBackend.top1_multi needs an "
+                             "ArenaStore built with track_rows=True")
+        queries = _np.asarray(queries, dtype=_np.float32)
+        b = queries.shape[0]
+        n_pol, n_slots = arena.occ.shape
+        if not any(v.slot_of for v in arena.views):
+            return (_np.full((n_pol, b), -1, dtype=_np.int64),
+                    _np.full((n_pol, b), -_np.inf, dtype=_np.float64))
+        pad = (-b) % self.q_pad
+        qp = _np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        s = self.n_shards
+        rows = -(-n_slots // s)                        # ceil division
+        # per-(shard, policy) valid prefix of the dense hwm
+        hwms = arena.hwms()[None, :]                   # (1, P)
+        offs = (_np.arange(s) * rows)[:, None]         # (S, 1)
+        lnv = _np.clip(hwms - offs, 0, rows).astype(_np.int32)   # (S, P)
+        shard_slab = self._arena_slab(arena, rows)
+        if self.mesh() is not None:
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            spec = NamedSharding(self._mesh, P("cache"))
+            dnv = jax.device_put(lnv, spec)
+            if self._multi_fn is None:
+                self._multi_fn = self._build_multi_lookup()
+            vals, win, local = self._multi_fn(qp, shard_slab, dnv)
+            vals = _np.asarray(vals[:, :b], dtype=_np.float64)
+            gslot = (_np.asarray(win[:, :b], dtype=_np.int64) * rows
+                     + _np.asarray(local[:, :b], dtype=_np.int64))
+        else:
+            # single-device fallback: same per-shard stacked kernel + the
+            # same argmax merge, looped on one device
+            from repro.kernels import ops
+            per_v, per_i = [], []
+            for si in range(s):
+                v, i = ops.sim_top1_multi(qp, shard_slab[si],
+                                          n_valid=lnv[si],
+                                          use_pallas=self.use_pallas,
+                                          interpret=self.interpret)
+                per_v.append(_np.asarray(v))
+                per_i.append(_np.asarray(i))
+            gv = _np.stack(per_v)                      # (S, P, B)
+            gi = _np.stack(per_i)
+            win = _np.argmax(gv, axis=0)               # (P, Bp)
+            pi = _np.arange(n_pol)[:, None]
+            bi = _np.arange(qp.shape[0])[None, :]
+            vals = gv[win, pi, bi][:, :b].astype(_np.float64)
+            gslot = (win * rows + gi[win, pi, bi])[:, :b].astype(_np.int64)
+        # padded tail rows are zeros: they can only win when every real
+        # sim < 0, which maps to a miss exactly like a free slot
+        safe = _np.minimum(gslot, n_slots - 1)
+        cids = _np.where(gslot < n_slots,
+                         arena.cid[_np.arange(n_pol)[:, None], safe], -1)
+        sims = _np.where(cids >= 0, vals, -_np.inf)
         return cids, sims
 
     def top1_rows(self, store: ShardedStore, queries: np.ndarray,

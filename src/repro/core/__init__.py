@@ -14,13 +14,15 @@ The cache protocol itself (lookup / admit / evict, payloads, metrics,
 backends) lives in :mod:`repro.cache`; the simulation drivers here replay
 traces through that facade.
 """
+from .arena import ArenaStore, run_arena
 from .embeddings import EmbeddingSpace, cosine
-from .policies import BASELINES, Policy
-from .policy_table import PolicyTable
+from .legacy_policies import LEGACY_BASELINES
+from .policies import BASELINES, ArrayPolicy, Policy
+from .policy_table import PolicyTable, SlabTable
 from .rac import RAC_VARIANTS, RACPolicy, make_rac
 from .radix import RadixRACPolicy
 from .simulator import (default_factories, hr_full, run_many, run_policy,
-                        run_policy_batched)
+                        run_policy_batched, with_seed)
 from .store import MutationJournal, ResidentStore
 from .structural import pagerank_power_jax, pagerank_reversed, \
     pagerank_scores
@@ -29,8 +31,10 @@ from .traces import (OASSTConfig, SynthConfig, measured_long_reuse_ratio,
 from .types import Request, Stats, Trace, summarize
 
 __all__ = [
-    "EmbeddingSpace", "cosine", "BASELINES", "Policy", "RACPolicy",
-    "RadixRACPolicy", "PolicyTable",
+    "EmbeddingSpace", "cosine", "BASELINES", "LEGACY_BASELINES", "Policy",
+    "ArrayPolicy", "RACPolicy",
+    "RadixRACPolicy", "PolicyTable", "SlabTable", "ArenaStore", "run_arena",
+    "with_seed",
     "RAC_VARIANTS", "make_rac", "run_policy", "run_policy_batched",
     "run_many",
     "default_factories", "hr_full", "MutationJournal", "ResidentStore",

@@ -1,27 +1,64 @@
-"""Baseline eviction policies (paper §4.2) under a single protocol.
+"""Baseline eviction policies as vectorized array-state over per-slot slabs.
 
-Protocol driven by :mod:`repro.core.simulator`:
+Every baseline (paper §4.2) keeps its metadata in fixed-size per-slot
+arrays — a :class:`repro.core.policy_table.SlabTable`, the journaled slab
+protocol the RAC :class:`~repro.core.policy_table.PolicyTable` already
+rides — indexed by the resident store's slot ids.  The protocol driven by
+:mod:`repro.core.simulator` and :class:`repro.cache.SemanticCache` is
+unchanged:
 
   - ``on_hit(cid, req, t)``   — the store served ``req`` from entry ``cid``
   - ``on_admit(cid, req, t)`` — a miss; entry ``cid`` was just inserted
-  - ``victim(t) -> cid``      — called while the store is over capacity; must
-                                return a resident cid AND forget it internally
+  - ``victim(t) -> cid``      — called while the store is over capacity;
+                                must return a resident cid
 
-Hit determination is owned by the simulator and identical for every policy
-(paper: "identical semantic hit semantics").  Policies only order residents.
+plus the vectorized surface the multi-policy arena
+(:mod:`repro.core.arena`) drives:
+
+  - ``on_hit_batch(cids, reqs, ts)`` / ``on_admit_batch(...)`` — apply a
+    run of consecutive events in one call.  The base implementations loop;
+    policies whose update is expressible as slab writes override them with
+    numpy ops that produce the *identical* final state (last-write-wins
+    sequences, ``np.add.at`` counters).
+  - ``victim_scores(t) -> (mask, keys)`` — the lexicographic eviction
+    keys over the slot axis for score-ordered policies; ``victim`` is then
+    a masked argmin (smallest key tuple wins).  Sweep/adaptive policies
+    (CLOCK, SIEVE, ARC, S3-FIFO, ...) override ``victim`` wholesale with a
+    vectorized transcription of their historical walk.
+
+Hit determination is owned by the simulator/facade and identical for every
+policy; policies only order residents.  Victim selection runs under the
+**sentinel-forget invariant**: a policy's ordering slab holds the dtype's
+max sentinel (``_SEQ0`` / ``+inf``) at every non-resident slot — the fill
+value initially, re-written by ``victim`` when it elects a slot — so the
+common eviction is one unmasked C ``argmin`` over the slab, with no
+occupancy mask or temporary.  Slabs that are not ordering keys are left
+stale at freed slots (masked selections exclude them; the next admission
+overwrites them).
+
+Every policy here makes bit-identical hit/miss/eviction decisions to its
+historical host-loop counterpart, which is retained verbatim in
+:mod:`repro.core.legacy_policies` as the parity oracle
+(``tests/test_arena.py`` asserts the equivalence across hit modes, chunk
+sizes, and backends).  RNG-bearing policies (TinyLFU's sketch salt, LHD,
+LeCaR, RANDOM) take a ``seed`` kwarg, threaded from
+``run_many``/``default_factories`` for reproducible reruns.
 
 Implemented baselines: FIFO, LRU, CLOCK, TTL, LFU, TinyLFU, ARC, S3-FIFO,
 SIEVE, 2Q, LRU-2, GDSF, LHD, LeCaR, Belady-MIN (offline optimal), RANDOM.
 """
 from __future__ import annotations
 
-import heapq
 import random
 from collections import OrderedDict, deque
 
 import numpy as np
 
+from .policy_table import SlabTable
+
 INF = float("inf")
+
+_SEQ0 = np.int64(1) << 62          # fill for never-written sequence slabs
 
 
 class Policy:
@@ -41,127 +78,305 @@ class Policy:
     def victim(self, t: int) -> int:
         raise NotImplementedError
 
+    # -- batched surface (default: the scalar loop, always correct) --------
+    def on_hit_batch(self, cids, reqs, ts):
+        for i, cid in enumerate(cids):
+            self.on_hit(cid, reqs[i], ts[i])
+
+    def on_admit_batch(self, cids, reqs, ts):
+        for i, cid in enumerate(cids):
+            self.on_admit(cid, reqs[i], ts[i])
+
+
+_SENTINELS: dict = {}
+
+
+def _sentinel(dtype):
+    s = _SENTINELS.get(dtype.char)
+    if s is None:
+        s = np.inf if dtype.kind == "f" else np.iinfo(dtype).max
+        _SENTINELS[dtype.char] = s
+    return s
+
+
+def _lex_argmin(mask: np.ndarray, *keys: np.ndarray) -> int:
+    """Slot of the lexicographically smallest key tuple among ``mask``.
+
+    Masked-out rows take the dtype's max sentinel (every live key is
+    strictly below it), so the common single-key case is one ``where`` +
+    one C ``argmin``; ties refine through successive keys.  The caller
+    guarantees a non-empty mask and that the final key is unique (or that
+    full ties are observationally equivalent)."""
+    k = keys[0]
+    masked = np.where(mask, k, _sentinel(k.dtype))
+    i = int(masked.argmin())
+    for nxt in keys[1:]:
+        tie = masked == masked[i]
+        if np.count_nonzero(tie) == 1:
+            return i
+        masked = np.where(tie, nxt, _sentinel(nxt.dtype))
+        i = int(masked.argmin())
+    return i
+
+
+def _lex_argmin_nomask(*keys: np.ndarray) -> int:
+    """Lexicographic argmin over the whole slot axis, relying on the
+    sentinel-forget invariant: every non-resident slot holds its key
+    dtype's sentinel (the slab fill, re-written by ``victim``), so no
+    occupancy mask — and no masked temporary — is needed."""
+    k = keys[0]
+    i = int(k.argmin())
+    for nxt in keys[1:]:
+        tie = k == k[i]
+        if np.count_nonzero(tie) == 1:
+            return i
+        k = np.where(tie, nxt, _sentinel(nxt.dtype))
+        i = int(k.argmin())
+    return i
+
+
+def _assign_last(arr: np.ndarray, slots: np.ndarray, vals: np.ndarray):
+    """``arr[slots] = vals`` with deterministic last-write-wins on
+    duplicate slots (what the scalar loop would leave behind)."""
+    u, ridx = np.unique(slots[::-1], return_index=True)
+    arr[u] = vals[len(slots) - 1 - ridx]
+    return u
+
+
+class ArrayPolicy(Policy):
+    """Base for slab-backed baselines (see module docstring).
+
+    ``slab_spec`` declares the per-slot fields; ``self.slabs`` is the
+    journaled :class:`SlabTable` sized to the store's slot count.  ``_seq``
+    is the monotone touch counter every recency/insertion ordering is
+    expressed in.
+    """
+
+    slab_spec: dict = {}
+    #: per-row slab journaling (device dirty-row sync) — off by default:
+    #: nothing mirrors baseline slabs yet and the stamps are hot-path cost
+    journal_slabs: bool = False
+
+    def __init__(self, capacity: int, store=None, **kw):
+        super().__init__(capacity, store)
+        if store is None:
+            raise ValueError(f"{self.name}: array-state policies order "
+                             "residents by store slot and need the store")
+        self.n_slots = store.emb.shape[0]
+        self.slabs = SlabTable(self.n_slots, journal=self.journal_slabs,
+                               **self.slab_spec)
+        self._ctr = 0
+
+    def _slot(self, cid: int) -> int:
+        return self.store.slot_of[cid]
+
+    def _slots(self, cids) -> np.ndarray:
+        so = self.store.slot_of
+        return np.array([so[c] for c in cids], dtype=np.int64)
+
+    def _tick(self) -> int:
+        self._ctr += 1
+        return self._ctr
+
+    def _tick_n(self, n: int) -> np.ndarray:
+        """``n`` fresh ascending sequence values."""
+        base = self._ctr
+        self._ctr += n
+        return np.arange(base + 1, base + n + 1, dtype=np.int64)
+
+    # -- score-ordered eviction (overridden by sweep/adaptive policies) ----
+    def victim_scores(self, t: int):
+        """(mask, lexicographic key arrays) over the slot axis; the victim
+        is the masked lexicographic argmin.  ``None`` when the policy's
+        eviction is not a pure score order (it overrides ``victim``)."""
+        return None
+
+    def _on_evict(self, slot: int, cid: int, t: int):
+        """Post-selection bookkeeping hook for score-ordered policies."""
+
+    def victim(self, t: int) -> int:
+        mask, keys = self.victim_scores(t)
+        slot = _lex_argmin(mask, *keys)
+        cid = int(self.store.cid[slot])
+        self._on_evict(slot, cid, t)
+        return cid
+
 
 # ---------------------------------------------------------------------------
-class FIFOPolicy(Policy):
+class FIFOPolicy(ArrayPolicy):
     name = "FIFO"
-
-    def __init__(self, capacity, store=None, **kw):
-        super().__init__(capacity, store)
-        self.q: deque[int] = deque()
+    slab_spec = {"seq": (np.int64, _SEQ0)}
 
     def on_hit(self, cid, req, t):
         pass
 
+    def on_hit_batch(self, cids, reqs, ts):
+        pass
+
     def on_admit(self, cid, req, t):
-        self.q.append(cid)
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self.slabs.touch(s)
+
+    def victim_scores(self, t):
+        return self.store.occ, (self.slabs.seq,)
 
     def victim(self, t):
-        return self.q.popleft()
+        seq = self.slabs.seq
+        s = int(seq.argmin())          # sentinel-forget: free slots = _SEQ0
+        seq[s] = _SEQ0
+        self.slabs.touch(s)
+        return int(self.store.cid[s])
 
 
-class LRUPolicy(Policy):
+class LRUPolicy(ArrayPolicy):
     name = "LRU"
-
-    def __init__(self, capacity, store=None, **kw):
-        super().__init__(capacity, store)
-        self.od: OrderedDict[int, None] = OrderedDict()
+    slab_spec = {"seq": (np.int64, _SEQ0)}
 
     def on_hit(self, cid, req, t):
-        self.od.move_to_end(cid)
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self.slabs.touch(s)
 
-    def on_admit(self, cid, req, t):
-        self.od[cid] = None
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        u = _assign_last(self.slabs.seq, slots, self._tick_n(len(slots)))
+        self.slabs.touch_rows(u)
+
+    on_admit = on_hit
+
+    def victim_scores(self, t):
+        return self.store.occ, (self.slabs.seq,)
 
     def victim(self, t):
-        cid, _ = self.od.popitem(last=False)
-        return cid
+        seq = self.slabs.seq
+        s = int(seq.argmin())          # sentinel-forget: free slots = _SEQ0
+        seq[s] = _SEQ0
+        self.slabs.touch(s)
+        return int(self.store.cid[s])
 
 
-class CLOCKPolicy(Policy):
+class CLOCKPolicy(ArrayPolicy):
     name = "CLOCK"
-
-    def __init__(self, capacity, store=None, **kw):
-        super().__init__(capacity, store)
-        self.ring: OrderedDict[int, bool] = OrderedDict()  # cid -> ref bit
+    slab_spec = {"seq": (np.int64, _SEQ0), "ref": (bool, False)}
 
     def on_hit(self, cid, req, t):
-        self.ring[cid] = True
+        s = self._slot(cid)
+        self.slabs.ref[s] = True
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        self.slabs.ref[slots] = True
+        self.slabs.touch_rows(slots)
 
     def on_admit(self, cid, req, t):
-        self.ring[cid] = False
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self.slabs.ref[s] = False
+        self.slabs.touch(s)
 
     def victim(self, t):
-        # sweep: give second chance to referenced entries
-        while True:
-            cid, ref = next(iter(self.ring.items()))
-            if ref:
-                self.ring[cid] = False
-                self.ring.move_to_end(cid)
-            else:
-                del self.ring[cid]
-                return cid
+        # the historical sweep in one pass: the hand starts at the ring
+        # head (min seq); every referenced entry it passes is cleared and
+        # moved to the tail in ring order; the first unreferenced entry is
+        # evicted.  All-referenced rings clear everyone and evict the head.
+        seq, ref = self.slabs.seq, self.slabs.ref
+        masked = np.where(ref, _SEQ0, seq)   # sentinel-forget free slots
+        vslot = int(masked.argmin())
+        if masked[vslot] >= _SEQ0:
+            # every resident referenced: clear all refs, evict the head
+            # (relative ring order is unchanged)
+            resident = seq < _SEQ0
+            ref[resident] = False
+            if self.slabs.log is not None:
+                self.slabs.touch_rows(np.flatnonzero(resident))
+            vslot = int(seq.argmin())
+        else:
+            pred = np.flatnonzero(ref & (seq < seq[vslot]))
+            if pred.size:
+                pred = pred[np.argsort(seq[pred], kind="stable")]
+                ref[pred] = False
+                seq[pred] = self._tick_n(pred.size)
+                self.slabs.touch_rows(pred)
+        seq[vslot] = _SEQ0
+        self.slabs.touch(vslot)
+        return int(self.store.cid[vslot])
 
 
-class TTLPolicy(Policy):
+class TTLPolicy(ArrayPolicy):
     """Expire-first (admit time + ttl), LRU among the unexpired."""
     name = "TTL"
+    slab_spec = {"seq": (np.int64, _SEQ0), "deadline": (np.int64, _SEQ0)}
 
     def __init__(self, capacity, store=None, ttl: int = 2000, **kw):
         super().__init__(capacity, store)
         self.ttl = ttl
-        self.od: OrderedDict[int, None] = OrderedDict()
-        self.deadline: dict[int, int] = {}
 
     def on_hit(self, cid, req, t):
-        self.od.move_to_end(cid)
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        u = _assign_last(self.slabs.seq, slots, self._tick_n(len(slots)))
+        self.slabs.touch_rows(u)
 
     def on_admit(self, cid, req, t):
-        self.od[cid] = None
-        self.deadline[cid] = t + self.ttl
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self.slabs.deadline[s] = t + self.ttl
+        self.slabs.touch(s)
 
     def victim(self, t):
-        expired = [c for c in self.od if self.deadline[c] <= t]
-        if expired:
-            cid = min(expired, key=lambda c: self.deadline[c])
+        seq, dl = self.slabs.seq, self.slabs.deadline
+        expired = dl <= t              # sentinel-forget: free slots = _SEQ0
+        if expired.any():
+            # min deadline; ties fall back to LRU position, matching the
+            # historical min() over the recency-ordered dict
+            vslot = _lex_argmin(expired, dl, seq)
         else:
-            cid = next(iter(self.od))
-        del self.od[cid]
-        del self.deadline[cid]
-        return cid
+            vslot = int(seq.argmin())
+        seq[vslot] = _SEQ0
+        dl[vslot] = _SEQ0
+        self.slabs.touch(vslot)
+        return int(self.store.cid[vslot])
 
 
-class LFUPolicy(Policy):
-    """LFU with LRU tie-break (lazy heap)."""
+class LFUPolicy(ArrayPolicy):
+    """LFU with LRU tie-break."""
     name = "LFU"
-
-    def __init__(self, capacity, store=None, **kw):
-        super().__init__(capacity, store)
-        self.freq: dict[int, int] = {}
-        self.stamp: dict[int, int] = {}
-        self.heap: list[tuple[int, int, int]] = []   # (freq, stamp, cid)
-        self._n = 0
-
-    def _touch(self, cid, t):
-        self._n += 1
-        self.stamp[cid] = self._n
-        heapq.heappush(self.heap, (self.freq[cid], self._n, cid))
+    slab_spec = {"freq": (np.int64, _SEQ0), "stamp": (np.int64, _SEQ0)}
 
     def on_hit(self, cid, req, t):
-        self.freq[cid] += 1
-        self._touch(cid, t)
+        s = self._slot(cid)
+        self.slabs.freq[s] += 1
+        self.slabs.stamp[s] = self._tick()
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        np.add.at(self.slabs.freq, slots, 1)
+        u = _assign_last(self.slabs.stamp, slots, self._tick_n(len(slots)))
+        self.slabs.touch_rows(u)
 
     def on_admit(self, cid, req, t):
-        self.freq[cid] = 1
-        self._touch(cid, t)
+        s = self._slot(cid)
+        self.slabs.freq[s] = 1
+        self.slabs.stamp[s] = self._tick()
+        self.slabs.touch(s)
+
+    def victim_scores(self, t):
+        return self.store.occ, (self.slabs.freq, self.slabs.stamp)
 
     def victim(self, t):
-        while True:
-            f, s, cid = heapq.heappop(self.heap)
-            if cid in self.freq and self.freq[cid] == f and self.stamp[cid] == s:
-                del self.freq[cid]
-                del self.stamp[cid]
-                return cid
+        freq, stamp = self.slabs.freq, self.slabs.stamp
+        vslot = _lex_argmin_nomask(freq, stamp)
+        freq[vslot] = _SEQ0            # sentinel-forget
+        stamp[vslot] = _SEQ0
+        self.slabs.touch(vslot)
+        return int(self.store.cid[vslot])
 
 
 class _CountMinSketch:
@@ -191,93 +406,142 @@ class _CountMinSketch:
         return int(min(self.tab[r, self._idx(key, r)] for r in range(self.d)))
 
 
-class TinyLFUPolicy(Policy):
+class TinyLFUPolicy(ArrayPolicy):
     """TinyLFU admission over an LRU main cache (simplified W-TinyLFU).
 
     Admission control is expressed through victim selection: the newly
-    inserted entry itself is evicted when its sketch frequency does not beat
-    the main cache's LRU victim.
+    inserted entry itself is evicted when its sketch frequency does not
+    beat the main cache's LRU victim.  The sketch is already array state
+    (a fixed (depth, width) counter table); recency rides the seq slab.
     """
     name = "TinyLFU"
+    slab_spec = {"seq": (np.int64, _SEQ0)}
 
-    def __init__(self, capacity, store=None, **kw):
+    def __init__(self, capacity, store=None, seed: int = 0, **kw):
         super().__init__(capacity, store)
-        self.od: OrderedDict[int, None] = OrderedDict()
-        self.sketch = _CountMinSketch(width=capacity * 8)
+        self.sketch = _CountMinSketch(width=capacity * 8, seed=7 + seed)
         self.window: deque[int] = deque()         # recent admissions (window)
         self.window_size = max(1, capacity // 100)
+        self._mru_slot = -1            # slot of the latest touch (hit/admit)
 
     def on_hit(self, cid, req, t):
         self.sketch.add(cid)
-        self.od.move_to_end(cid)
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self._mru_slot = s
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        sketch_add = self.sketch.add
+        slot_of = self.store.slot_of
+        seq = self.slabs.seq
+        s = -1
+        for cid in cids:
+            sketch_add(cid)
+            s = slot_of[cid]
+            seq[s] = self._tick()
+        self._mru_slot = s
+        if self.slabs.log is not None:
+            self.slabs.touch_rows([slot_of[c] for c in cids])
 
     def on_admit(self, cid, req, t):
         self.sketch.add(cid)
-        self.od[cid] = None
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self._mru_slot = s
+        self.slabs.touch(s)
         self.window.append(cid)
         while len(self.window) > self.window_size:
             self.window.popleft()
 
     def victim(self, t):
-        newest = next(reversed(self.od))
-        oldest = next(iter(self.od))
-        if newest in self.window and newest != oldest:
+        seq = self.slabs.seq
+        oldest = int(seq.argmin())     # sentinel-forget: free slots = _SEQ0
+        # victim always follows an admission (Alg. 1 insert-then-evict),
+        # so the MRU touch IS the newest entry — no slab scan needed
+        newest = self._mru_slot
+        new_cid = int(self.store.cid[newest])
+        old_cid = int(self.store.cid[oldest])
+        if new_cid in self.window and new_cid != old_cid:
             # admission duel: candidate vs main LRU victim
-            if self.sketch.estimate(newest) > self.sketch.estimate(oldest):
-                del self.od[oldest]
-                return oldest
-            del self.od[newest]
-            return newest
-        del self.od[oldest]
-        return oldest
+            vslot, cid = ((oldest, old_cid)
+                          if self.sketch.estimate(new_cid)
+                          > self.sketch.estimate(old_cid)
+                          else (newest, new_cid))
+        else:
+            vslot, cid = oldest, old_cid
+        seq[vslot] = _SEQ0
+        self.slabs.touch(vslot)
+        return cid
 
 
-class ARCPolicy(Policy):
-    """Adaptive Replacement Cache (Megiddo & Modha, FAST'03)."""
+class ARCPolicy(ArrayPolicy):
+    """Adaptive Replacement Cache (Megiddo & Modha, FAST'03).
+
+    Resident membership (T1 recency list vs T2 frequency list) and order
+    live in slabs; the bounded ghost lists B1/B2 are cid-keyed host dicts
+    exactly as in the historical implementation.
+    """
     name = "ARC"
+    slab_spec = {"which": (np.int8, 0), "seq": (np.int64, _SEQ0)}
 
     def __init__(self, capacity, store=None, **kw):
         super().__init__(capacity, store)
         self.p = 0.0
-        self.t1: OrderedDict[int, None] = OrderedDict()
-        self.t2: OrderedDict[int, None] = OrderedDict()
         self.b1: OrderedDict[int, None] = OrderedDict()
         self.b2: OrderedDict[int, None] = OrderedDict()
+        self.n_t1 = 0
+        self.n_t2 = 0
 
     def on_hit(self, cid, req, t):
-        if cid in self.t1:
-            del self.t1[cid]
-            self.t2[cid] = None
-        else:
-            self.t2.move_to_end(cid)
+        s = self._slot(cid)
+        if self.slabs.which[s] == 1:
+            self.slabs.which[s] = 2
+            self.n_t1 -= 1
+            self.n_t2 += 1
+        self.slabs.seq[s] = self._tick()
+        self.slabs.touch(s)
 
     def on_admit(self, cid, req, t):
         c = self.capacity
+        s = self._slot(cid)
         if cid in self.b1:
             self.p = min(c, self.p + max(1.0, len(self.b2) / max(1, len(self.b1))))
             del self.b1[cid]
-            self.t2[cid] = None
+            self.slabs.which[s] = 2
+            self.n_t2 += 1
         elif cid in self.b2:
             self.p = max(0.0, self.p - max(1.0, len(self.b1) / max(1, len(self.b2))))
             del self.b2[cid]
-            self.t2[cid] = None
+            self.slabs.which[s] = 2
+            self.n_t2 += 1
         else:
-            l1 = len(self.t1) + len(self.b1)
+            l1 = self.n_t1 + len(self.b1)
             if l1 >= c:
                 if self.b1:
                     self.b1.popitem(last=False)
-            elif l1 + len(self.t2) + len(self.b2) >= 2 * c:
+            elif l1 + self.n_t2 + len(self.b2) >= 2 * c:
                 if self.b2:
                     self.b2.popitem(last=False)
-            self.t1[cid] = None
+            self.slabs.which[s] = 1
+            self.n_t1 += 1
+        self.slabs.seq[s] = self._tick()
+        self.slabs.touch(s)
 
     def victim(self, t):
-        if self.t1 and (len(self.t1) > self.p or not self.t2):
-            cid, _ = self.t1.popitem(last=False)
+        which, seq = self.slabs.which, self.slabs.seq
+        if self.n_t1 and (self.n_t1 > self.p or not self.n_t2):
+            vslot = int(np.where(which == 1, seq, _SEQ0).argmin())
+            cid = int(self.store.cid[vslot])
             self.b1[cid] = None
+            self.n_t1 -= 1
         else:
-            cid, _ = self.t2.popitem(last=False)
+            vslot = int(np.where(which == 2, seq, _SEQ0).argmin())
+            cid = int(self.store.cid[vslot])
             self.b2[cid] = None
+            self.n_t2 -= 1
+        which[vslot] = 0
+        self.slabs.touch(vslot)
         # bound ghost lists
         while len(self.b1) > self.capacity:
             self.b1.popitem(last=False)
@@ -286,218 +550,323 @@ class ARCPolicy(Policy):
         return cid
 
 
-class S3FIFOPolicy(Policy):
-    """S3-FIFO (Yang et al., SOSP'23 / NSDI'23): small + main + ghost FIFOs."""
+class S3FIFOPolicy(ArrayPolicy):
+    """S3-FIFO (Yang et al., SOSP'23 / NSDI'23): small + main + ghost FIFOs.
+
+    Queue membership/order/frequency are slabs; the historical pop-and-
+    reappend walks collapse to one vectorized pass each — an entry at
+    queue position ``pos`` with frequency ``f`` is evicted from MAIN after
+    ``f`` full demotion cycles plus ``pos`` steps, so the victim is the
+    lexicographic min of ``(freq, seq)`` and every entry processed before
+    it is decremented and re-sequenced exactly as the walk would have.
+    """
     name = "S3-FIFO"
+    slab_spec = {"queue": (np.int8, 0),        # 0 none / 1 small / 2 main
+                 "seq": (np.int64, _SEQ0),
+                 "freq": (np.int64, 0)}
 
     def __init__(self, capacity, store=None, small_frac: float = 0.1, **kw):
         super().__init__(capacity, store)
         self.small_cap = max(1, int(capacity * small_frac))
-        self.small: deque[int] = deque()
-        self.main: deque[int] = deque()
         self.ghost: OrderedDict[int, None] = OrderedDict()
-        self.freq: dict[int, int] = {}
-        self.in_main: set[int] = set()
+        self.n_small = 0
+        self.n_main = 0
 
     def on_hit(self, cid, req, t):
-        self.freq[cid] = min(3, self.freq.get(cid, 0) + 1)
+        s = self._slot(cid)
+        self.slabs.freq[s] = min(3, self.slabs.freq[s] + 1)
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        np.add.at(self.slabs.freq, slots, 1)
+        np.minimum(self.slabs.freq, 3, out=self.slabs.freq)
+        self.slabs.touch_rows(slots)
 
     def on_admit(self, cid, req, t):
-        self.freq[cid] = 0
+        s = self._slot(cid)
+        self.slabs.freq[s] = 0
         if cid in self.ghost:
             del self.ghost[cid]
-            self.main.append(cid)
-            self.in_main.add(cid)
+            self.slabs.queue[s] = 2
+            self.n_main += 1
         else:
-            self.small.append(cid)
+            self.slabs.queue[s] = 1
+            self.n_small += 1
+        self.slabs.seq[s] = self._tick()
+        self.slabs.touch(s)
 
     def _evict_main(self) -> int:
-        while True:
-            cid = self.main.popleft()
-            if cid not in self.in_main:
-                continue
-            if self.freq.get(cid, 0) > 0:
-                self.freq[cid] -= 1
-                self.main.append(cid)
-            else:
-                self.in_main.discard(cid)
-                self.freq.pop(cid, None)
-                return cid
+        queue, seq, freq = self.slabs.queue, self.slabs.seq, self.slabs.freq
+        mask = self.store.occ & (queue == 2)
+        vslot = _lex_argmin(mask, freq, seq)
+        fmin = int(freq[vslot])
+        before = np.flatnonzero(mask & (seq < seq[vslot]))
+        after = np.flatnonzero(mask & (seq > seq[vslot]))
+        freq[before] -= fmin + 1       # processed fmin+1 times before evict
+        freq[after] -= fmin            # processed fmin full cycles
+        if fmin > 0:
+            # every survivor was re-appended: tail-of-final-pass entries
+            # (after) precede the re-processed head entries (before)
+            walk = np.concatenate([after[np.argsort(seq[after],
+                                                    kind="stable")],
+                                   before[np.argsort(seq[before],
+                                                     kind="stable")]])
+            seq[walk] = self._tick_n(walk.size)
+            self.slabs.touch_rows(walk)
+        elif before.size:
+            order = before[np.argsort(seq[before], kind="stable")]
+            seq[order] = self._tick_n(order.size)
+            self.slabs.touch_rows(order)
+        queue[vslot] = 0
+        self.n_main -= 1
+        self.slabs.touch(vslot)
+        return int(self.store.cid[vslot])
 
     def victim(self, t):
-        if len(self.small) > self.small_cap or not self.main:
-            while self.small:
-                cid = self.small.popleft()
-                if self.freq.get(cid, 0) > 1:
-                    self.main.append(cid)       # promote
-                    self.in_main.add(cid)
-                    self.freq[cid] = 0
-                else:
-                    self.ghost[cid] = None
-                    while len(self.ghost) > self.capacity:
-                        self.ghost.popitem(last=False)
-                    self.freq.pop(cid, None)
-                    return cid
+        queue, seq, freq = self.slabs.queue, self.slabs.seq, self.slabs.freq
+        if self.n_small > self.small_cap or not self.n_main:
+            small = np.flatnonzero(self.store.occ & (queue == 1))
+            small = small[np.argsort(seq[small], kind="stable")]
+            keep = freq[small] > 1                 # promoted on the walk
+            first = np.flatnonzero(~keep)
+            k = int(first[0]) if first.size else small.size
+            promo = small[:k]
+            if promo.size:
+                queue[promo] = 2
+                freq[promo] = 0
+                seq[promo] = self._tick_n(promo.size)
+                self.slabs.touch_rows(promo)
+                self.n_small -= promo.size
+                self.n_main += promo.size
+            if first.size:
+                vslot = int(small[k])
+                cid = int(self.store.cid[vslot])
+                self.ghost[cid] = None
+                while len(self.ghost) > self.capacity:
+                    self.ghost.popitem(last=False)
+                queue[vslot] = 0
+                self.n_small -= 1
+                self.slabs.touch(vslot)
+                return cid
         return self._evict_main()
 
 
-class SIEVEPolicy(Policy):
-    """SIEVE (Zhang et al., NSDI'24): FIFO queue + moving hand + visited bits."""
+class SIEVEPolicy(ArrayPolicy):
+    """SIEVE (Zhang et al., NSDI'24): FIFO order + moving hand + visited bits."""
     name = "SIEVE"
+    slab_spec = {"seq": (np.int64, _SEQ0), "visited": (bool, False)}
 
     def __init__(self, capacity, store=None, **kw):
         super().__init__(capacity, store)
-        self.order: OrderedDict[int, bool] = OrderedDict()  # head=oldest
-        self.hand: int | None = None                         # cid at hand
+        self.hand: int | None = None               # cid at hand
 
     def on_hit(self, cid, req, t):
-        self.order[cid] = True
+        s = self._slot(cid)
+        self.slabs.visited[s] = True
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        self.slabs.visited[slots] = True
+        self.slabs.touch_rows(slots)
 
     def on_admit(self, cid, req, t):
-        self.order[cid] = False   # insert at tail (newest)
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()           # insert at tail (newest)
+        self.slabs.visited[s] = False
+        self.slabs.touch(s)
 
     def victim(self, t):
-        keys = list(self.order.keys())
-        idx = keys.index(self.hand) if self.hand in self.order else 0
-        n = len(keys)
-        for _ in range(2 * n + 1):
-            cid = keys[idx % n]
-            if cid not in self.order:
-                idx += 1
-                continue
-            if self.order[cid]:
-                self.order[cid] = False
-                idx += 1
-            else:
-                nxt = keys[(idx + 1) % n]
-                self.hand = nxt if nxt != cid else None
-                del self.order[cid]
-                return cid
-        cid, _ = self.order.popitem(last=False)   # fallback (unreachable)
+        # the historical hand walk without sorting: order residents by the
+        # CYCLIC key (insertion seq rotated so the hand is first); the
+        # victim is the min-cyclic-key unvisited entry, everything walked
+        # past loses its visited bit, and the hand moves to the victim's
+        # ring successor.  SIEVE never reorders entries, so seqs are
+        # untouched.  Free slots hold the seq sentinel (sentinel-forget).
+        seq, visited = self.slabs.seq, self.slabs.visited
+        big = _sentinel(seq.dtype)
+        hslot = (self.store.slot_of.get(self.hand, -1)
+                 if self.hand is not None else -1)
+        if hslot >= 0:
+            hseq = seq[hslot]
+            ckey = np.where(seq >= hseq, seq - hseq, seq - hseq + _SEQ0)
+            ckey[seq >= _SEQ0] = big               # exclude free slots
+        else:
+            ckey = np.where(seq < _SEQ0, seq, big)
+        cand = np.where(visited, big, ckey)
+        vslot = int(cand.argmin())
+        if cand[vslot] >= big:
+            # all residents visited: one full pass clears everyone, the
+            # second evicts the walk head
+            vslot = int(ckey.argmin())
+            passed = ckey < big
+        else:
+            passed = visited & (ckey < ckey[vslot])
+        visited[passed] = False
+        if self.slabs.log is not None:
+            self.slabs.touch_rows(np.flatnonzero(passed))
+        cid = int(self.store.cid[vslot])
+        # ring successor in the pre-eviction snapshot (wraps to the head)
+        nkey = np.where(ckey > ckey[vslot], ckey, big)
+        nslot = int(nkey.argmin())
+        if nkey[nslot] >= big:
+            nslot = int(ckey.argmin())             # victim was cyclic-last
+        nxt = int(self.store.cid[nslot])
+        self.hand = nxt if nxt != cid else None
+        seq[vslot] = _SEQ0             # sentinel-forget
+        self.slabs.touch(vslot)
         return cid
 
 
-class TwoQPolicy(Policy):
+class TwoQPolicy(ArrayPolicy):
     """2Q (Johnson & Shasha, VLDB'94): A1in FIFO + A1out ghost + Am LRU."""
     name = "2Q"
+    slab_spec = {"queue": (np.int8, 0),            # 1 A1in / 2 Am
+                 "seq": (np.int64, _SEQ0)}
 
     def __init__(self, capacity, store=None, kin_frac=0.25, kout_frac=0.5, **kw):
         super().__init__(capacity, store)
         self.kin = max(1, int(capacity * kin_frac))
         self.kout = max(1, int(capacity * kout_frac))
-        self.a1in: deque[int] = deque()
         self.a1out: OrderedDict[int, None] = OrderedDict()
-        self.am: OrderedDict[int, None] = OrderedDict()
-        self.in_a1in: set[int] = set()
+        self.n_in = 0
+        self.n_am = 0
 
     def on_hit(self, cid, req, t):
-        if cid in self.am:
-            self.am.move_to_end(cid)
+        s = self._slot(cid)
+        if self.slabs.queue[s] == 2:
+            self.slabs.seq[s] = self._tick()
+            self.slabs.touch(s)
         # hits in A1in leave position unchanged (2Q semantics)
 
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        vals = self._tick_n(len(slots))
+        am = self.slabs.queue[slots] == 2
+        if am.any():
+            u = _assign_last(self.slabs.seq, slots[am], vals[am])
+            self.slabs.touch_rows(u)
+
     def on_admit(self, cid, req, t):
+        s = self._slot(cid)
         if cid in self.a1out:
             del self.a1out[cid]
-            self.am[cid] = None
+            self.slabs.queue[s] = 2
+            self.n_am += 1
         else:
-            self.a1in.append(cid)
-            self.in_a1in.add(cid)
+            self.slabs.queue[s] = 1
+            self.n_in += 1
+        self.slabs.seq[s] = self._tick()
+        self.slabs.touch(s)
 
     def victim(self, t):
-        if len(self.a1in) > self.kin or not self.am:
-            while self.a1in:
-                cid = self.a1in.popleft()
-                if cid in self.in_a1in:
-                    self.in_a1in.discard(cid)
-                    self.a1out[cid] = None
-                    while len(self.a1out) > self.kout:
-                        self.a1out.popitem(last=False)
-                    return cid
-        cid, _ = self.am.popitem(last=False)
+        queue, seq = self.slabs.queue, self.slabs.seq
+        if (self.n_in > self.kin or not self.n_am) and self.n_in:
+            vslot = int(np.where(queue == 1, seq, _SEQ0).argmin())
+            cid = int(self.store.cid[vslot])
+            self.a1out[cid] = None
+            while len(self.a1out) > self.kout:
+                self.a1out.popitem(last=False)
+            self.n_in -= 1
+        else:
+            vslot = int(np.where(queue == 2, seq, _SEQ0).argmin())
+            cid = int(self.store.cid[vslot])
+            self.n_am -= 1
+        queue[vslot] = 0
+        self.slabs.touch(vslot)
         return cid
 
 
-class LRU2Policy(Policy):
+class LRU2Policy(ArrayPolicy):
     """LRU-2 (O'Neil et al.): evict max backward-2nd-access distance."""
     name = "LRU-2"
-
-    def __init__(self, capacity, store=None, **kw):
-        super().__init__(capacity, store)
-        self.hist: dict[int, tuple[int, int]] = {}   # cid -> (t_prev, t_last)
-        self.heap: list[tuple[int, int, int]] = []   # (k2_time, t_last, cid)
-
-    def _push(self, cid):
-        k2, last = self.hist[cid]
-        heapq.heappush(self.heap, (k2, last, cid))
+    slab_spec = {"k2": (np.int64, _SEQ0), "last": (np.int64, 0)}
 
     def on_hit(self, cid, req, t):
-        _, last = self.hist[cid]
-        self.hist[cid] = (last, t)
-        self._push(cid)
+        s = self._slot(cid)
+        self.slabs.k2[s] = self.slabs.last[s]
+        self.slabs.last[s] = t
+        self.slabs.touch(s)
 
     def on_admit(self, cid, req, t):
-        self.hist[cid] = (-10**9, t)                 # no 2nd-to-last yet
-        self._push(cid)
+        s = self._slot(cid)
+        self.slabs.k2[s] = -10**9                  # no 2nd-to-last yet
+        self.slabs.last[s] = t
+        self.slabs.touch(s)
+
+    def victim_scores(self, t):
+        return self.store.occ, (self.slabs.k2, self.slabs.last,
+                                self.store.cid)
 
     def victim(self, t):
-        while True:
-            k2, last, cid = heapq.heappop(self.heap)
-            if cid in self.hist and self.hist[cid] == (k2, last):
-                del self.hist[cid]
-                return cid
+        k2 = self.slabs.k2
+        vslot = _lex_argmin_nomask(k2, self.slabs.last, self.store.cid)
+        k2[vslot] = _SEQ0              # sentinel-forget
+        self.slabs.touch(vslot)
+        return int(self.store.cid[vslot])
 
 
-class GDSFPolicy(Policy):
+class GDSFPolicy(ArrayPolicy):
     """GreedyDual-Size-Frequency with unit size/cost: H = L + freq."""
     name = "GDSF"
+    slab_spec = {"freq": (np.int64, 0), "h": (np.float64, INF),
+                 "stamp": (np.int64, _SEQ0)}
 
     def __init__(self, capacity, store=None, **kw):
         super().__init__(capacity, store)
         self.L = 0.0
-        self.freq: dict[int, int] = {}
-        self.h: dict[int, float] = {}
-        self.heap: list[tuple[float, int, int]] = []
-        self._n = 0
-
-    def _push(self, cid):
-        self._n += 1
-        heapq.heappush(self.heap, (self.h[cid], self._n, cid))
 
     def on_hit(self, cid, req, t):
-        self.freq[cid] += 1
-        self.h[cid] = self.L + self.freq[cid]
-        self._push(cid)
+        s = self._slot(cid)
+        self.slabs.freq[s] += 1
+        self.slabs.h[s] = self.L + self.slabs.freq[s]
+        self.slabs.stamp[s] = self._tick()
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        np.add.at(self.slabs.freq, slots, 1)
+        u = _assign_last(self.slabs.stamp, slots, self._tick_n(len(slots)))
+        self.slabs.h[u] = self.L + self.slabs.freq[u]
+        self.slabs.touch_rows(u)
 
     def on_admit(self, cid, req, t):
-        self.freq[cid] = 1
-        self.h[cid] = self.L + 1.0
-        self._push(cid)
+        s = self._slot(cid)
+        self.slabs.freq[s] = 1
+        self.slabs.h[s] = self.L + 1.0
+        self.slabs.stamp[s] = self._tick()
+        self.slabs.touch(s)
+
+    def victim_scores(self, t):
+        return self.store.occ, (self.slabs.h, self.slabs.stamp)
 
     def victim(self, t):
-        while True:
-            h, _, cid = heapq.heappop(self.heap)
-            if cid in self.h and self.h[cid] == h:
-                self.L = h
-                del self.h[cid]
-                del self.freq[cid]
-                return cid
+        h = self.slabs.h
+        vslot = _lex_argmin_nomask(h, self.slabs.stamp)   # free slots: +inf
+        self.L = float(h[vslot])
+        h[vslot] = INF                 # sentinel-forget
+        self.slabs.touch(vslot)
+        return int(self.store.cid[vslot])
 
 
-class LHDPolicy(Policy):
+class LHDPolicy(ArrayPolicy):
     """LHD (Beckmann et al., NSDI'18), simplified with sampling.
 
     Hit density per log2-age class is estimated online from observed hit /
     eviction ages; eviction samples ``n_sample`` residents and removes the
-    minimum-density one (as in the paper's implementation).
+    minimum-density one.  The sampling order (and hence the rng stream)
+    replicates the historical swap-remove key list exactly.
     """
     name = "LHD"
     N_CLASSES = 32
+    slab_spec = {"last": (np.int64, 0)}
 
-    def __init__(self, capacity, store=None, n_sample: int = 64, seed: int = 0, **kw):
+    def __init__(self, capacity, store=None, n_sample: int = 64, seed: int = 0,
+                 **kw):
         super().__init__(capacity, store)
         self.n_sample = n_sample
         self.rng = random.Random(seed)
-        self.last: dict[int, int] = {}
         self.keys: list[int] = []
         self.pos: dict[int, int] = {}
         self.hit_age = np.ones(self.N_CLASSES)
@@ -507,12 +876,9 @@ class LHDPolicy(Policy):
     def _cls(age: int) -> int:
         return min(LHDPolicy.N_CLASSES - 1, max(0, int(np.log2(age + 1))))
 
-    def _density(self, cid: int, t: int) -> float:
-        age = t - self.last[cid]
-        c = self._cls(age)
-        p_hit = self.hit_age[c] / (self.hit_age[c] + self.ev_age[c])
-        exp_life = (age + 1.0)
-        return p_hit / exp_life
+    def _cls_vec(self, ages: np.ndarray) -> np.ndarray:
+        return np.minimum(self.N_CLASSES - 1,
+                          np.maximum(0, np.log2(ages + 1).astype(np.int64)))
 
     def _add(self, cid):
         self.pos[cid] = len(self.keys)
@@ -526,27 +892,67 @@ class LHDPolicy(Policy):
             self.pos[last] = i
 
     def on_hit(self, cid, req, t):
-        self.hit_age[self._cls(t - self.last[cid])] += 1
-        self.last[cid] = t
+        s = self._slot(cid)
+        self.hit_age[self._cls(t - self.slabs.last[s])] += 1
+        self.slabs.last[s] = t
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        if np.unique(slots).size != slots.size:
+            # an age depends on the previous touch of the same slot —
+            # duplicate slots need the sequential order
+            return Policy.on_hit_batch(self, cids, reqs, ts)
+        ages = np.asarray(ts, dtype=np.int64) - self.slabs.last[slots]
+        np.add.at(self.hit_age, self._cls_vec(ages), 1)
+        self.slabs.last[slots] = ts
+        self.slabs.touch_rows(slots)
 
     def on_admit(self, cid, req, t):
-        self.last[cid] = t
+        s = self._slot(cid)
+        self.slabs.last[s] = t
+        self.slabs.touch(s)
         self._add(cid)
+
+    def _sample(self, n: int) -> list[int]:
+        """``n_sample`` draws of ``rng.randrange(n)``, consuming the exact
+        bit stream ``random.Random._randbelow_with_getrandbits`` would —
+        bit-identical samples to the legacy oracle, minus two Python
+        frames per draw."""
+        getrandbits = self.rng.getrandbits
+        k = n.bit_length()
+        keys = self.keys
+        out = []
+        for _ in range(self.n_sample):
+            r = getrandbits(k)
+            while r >= n:
+                r = getrandbits(k)
+            out.append(keys[r])
+        return out
 
     def victim(self, t):
         n = len(self.keys)
-        sample = (self.keys if n <= self.n_sample
-                  else [self.keys[self.rng.randrange(n)] for _ in range(self.n_sample)])
-        cid = min(sample, key=lambda c: (self._density(c, t), -self.last[c], c))
-        self.ev_age[self._cls(t - self.last[cid])] += 1
+        sample = self.keys if n <= self.n_sample else self._sample(n)
+        cids = np.fromiter(sample, dtype=np.int64, count=len(sample))
+        slots = self._slots(sample)
+        last = self.slabs.last[slots]
+        ages = t - last
+        c = self._cls_vec(ages)
+        p_hit = self.hit_age[c] / (self.hit_age[c] + self.ev_age[c])
+        dens = p_hit / (ages + 1.0)
+        # historical min(sample, key=(density, -last, cid)) — full ties
+        # only occur between duplicate samples of one cid
+        i = _lex_argmin(np.ones(len(sample), dtype=bool), dens, -last, cids)
+        cid = int(cids[i])
+        self.ev_age[self._cls(t - int(last[i]))] += 1
         self._del(cid)
-        del self.last[cid]
         return cid
 
 
-class LeCaRPolicy(Policy):
+class LeCaRPolicy(ArrayPolicy):
     """LeCaR (Vietri et al., HotStorage'18): regret-weighted LRU/LFU experts."""
     name = "LeCaR"
+    slab_spec = {"seq": (np.int64, _SEQ0), "freq": (np.int64, _SEQ0)}
 
     def __init__(self, capacity, store=None, learning_rate=0.45,
                  discount=None, seed=0, **kw):
@@ -555,8 +961,6 @@ class LeCaRPolicy(Policy):
         self.d = discount if discount is not None else 0.005 ** (1.0 / capacity)
         self.w = np.array([0.5, 0.5])            # [LRU, LFU]
         self.rng = random.Random(seed)
-        self.lru: OrderedDict[int, None] = OrderedDict()
-        self.freq: dict[int, int] = {}
         self.h_lru: OrderedDict[int, int] = OrderedDict()   # ghost: cid -> evict t
         self.h_lfu: OrderedDict[int, int] = OrderedDict()
 
@@ -570,65 +974,89 @@ class LeCaRPolicy(Policy):
             self.w = self.w / self.w.sum()
 
     def on_hit(self, cid, req, t):
-        self.lru.move_to_end(cid)
-        self.freq[cid] += 1
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self.slabs.freq[s] += 1
+        self.slabs.touch(s)
+
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        np.add.at(self.slabs.freq, slots, 1)
+        u = _assign_last(self.slabs.seq, slots, self._tick_n(len(slots)))
+        self.slabs.touch_rows(u)
 
     def on_admit(self, cid, req, t):
         self._reward(self.h_lru, 0, cid, t)
         self._reward(self.h_lfu, 1, cid, t)
-        self.lru[cid] = None
-        self.freq[cid] = 1
+        s = self._slot(cid)
+        self.slabs.seq[s] = self._tick()
+        self.slabs.freq[s] = 1
+        self.slabs.touch(s)
 
     def victim(self, t):
+        seq, freq = self.slabs.seq, self.slabs.freq
         use_lru = self.rng.random() < self.w[0]
         if use_lru:
-            cid = next(iter(self.lru))
+            vslot = int(seq.argmin())  # sentinel-forget: free slots = _SEQ0
+            cid = int(self.store.cid[vslot])
             self.h_lru[cid] = t
             while len(self.h_lru) > self.capacity:
                 self.h_lru.popitem(last=False)
         else:
-            cid = min(self.freq, key=lambda c: (self.freq[c], c))
+            vslot = _lex_argmin_nomask(freq, self.store.cid)
+            cid = int(self.store.cid[vslot])
             self.h_lfu[cid] = t
             while len(self.h_lfu) > self.capacity:
                 self.h_lfu.popitem(last=False)
-        del self.lru[cid]
-        del self.freq[cid]
+        seq[vslot] = _SEQ0
+        freq[vslot] = _SEQ0
+        self.slabs.touch(vslot)
         return cid
 
 
-class BeladyPolicy(Policy):
-    """Belady's MIN — offline optimal; uses precomputed next-use indices."""
+class BeladyPolicy(ArrayPolicy):
+    """Belady's MIN — offline optimal; uses precomputed next-use indices.
+
+    The slab stores the NEGATED farthest-next-use key, so the max-distance
+    victim is a plain lexicographic argmin under the sentinel-forget
+    invariant (free slots hold ``_SEQ0``, above every real ``-key``)."""
     name = "Belady"
     requires_future = True
+    slab_spec = {"negkey": (np.int64, _SEQ0)}
 
-    def __init__(self, capacity, store=None, **kw):
-        super().__init__(capacity, store)
-        self.next_use: dict[int, int] = {}
-        self.heap: list[tuple[int, int]] = []    # (-next_use_key, cid)
+    _NEVER = 10 ** 12                            # never-used-again = farthest
 
-    @staticmethod
-    def _key(nu: int) -> int:
-        return 10 ** 12 if nu < 0 else nu        # never-used-again = farthest
-
-    def _record(self, cid, req):
-        self.next_use[cid] = req.next_use
-        heapq.heappush(self.heap, (-self._key(req.next_use), cid))
+    @classmethod
+    def _key(cls, nu: int) -> int:
+        return cls._NEVER if nu < 0 else nu
 
     def on_hit(self, cid, req, t):
-        self._record(cid, req)
+        s = self._slot(cid)
+        self.slabs.negkey[s] = -self._key(req.next_use)
+        self.slabs.touch(s)
 
-    def on_admit(self, cid, req, t):
-        self._record(cid, req)
+    def on_hit_batch(self, cids, reqs, ts):
+        slots = self._slots(cids)
+        nus = np.fromiter((r.next_use for r in reqs), dtype=np.int64,
+                          count=len(reqs))
+        vals = np.where(nus < 0, -self._NEVER, -nus)
+        u = _assign_last(self.slabs.negkey, slots, vals)
+        self.slabs.touch_rows(u)
+
+    on_admit = on_hit
+
+    def victim_scores(self, t):
+        return self.store.occ, (self.slabs.negkey, self.store.cid)
 
     def victim(self, t):
-        while True:
-            negk, cid = heapq.heappop(self.heap)
-            if cid in self.next_use and -negk == self._key(self.next_use[cid]):
-                del self.next_use[cid]
-                return cid
+        negkey = self.slabs.negkey
+        vslot = _lex_argmin_nomask(negkey, self.store.cid)
+        negkey[vslot] = _SEQ0          # sentinel-forget
+        self.slabs.touch(vslot)
+        return int(self.store.cid[vslot])
 
 
-class RandomPolicy(Policy):
+class RandomPolicy(ArrayPolicy):
     name = "RANDOM"
 
     def __init__(self, capacity, store=None, seed=0, **kw):
@@ -638,6 +1066,9 @@ class RandomPolicy(Policy):
         self.pos: dict[int, int] = {}
 
     def on_hit(self, cid, req, t):
+        pass
+
+    def on_hit_batch(self, cids, reqs, ts):
         pass
 
     def on_admit(self, cid, req, t):
@@ -663,3 +1094,6 @@ BASELINES: dict[str, type[Policy]] = {
         RandomPolicy,
     ]
 }
+
+#: baselines whose decisions consume randomness (seed-threading targets)
+RNG_BASELINES = frozenset({"TinyLFU", "LHD", "LeCaR", "RANDOM"})

@@ -43,6 +43,66 @@ import numpy as np
 from .store import MutationJournal
 
 
+class SlabTable:
+    """Journaled named per-slot arrays — the generic array-state slab.
+
+    The generalization of the :class:`PolicyTable` slot axis that the
+    array-state baseline policies (:mod:`repro.core.policies`) build on:
+    each field is a fixed-size 1-D array aligned with the resident store's
+    slots, and every mutation can be stamped into one shared
+    :class:`~repro.core.store.MutationJournal` — the exact dirty-row sync
+    protocol device backends already speak for the embedding slab and the
+    RAC scoring tables, so a backend can mirror any policy's metadata
+    without knowing which policy owns it.
+
+    ``specs`` maps field name -> ``(dtype, fill)``; fields are exposed as
+    attributes (``slabs.seq``, ``slabs.freq``, ...).  The owning policy is
+    the single writer: it mutates rows in place and stamps them through
+    :meth:`touch` / :meth:`touch_rows`.  Freed slots are *not* cleared on
+    eviction — selection masks on store occupancy, and the next admission
+    into the slot overwrites every field it reads — so the hot path stays
+    O(touched rows); :meth:`clear` exists for policies that do want the
+    reset.
+
+    ``journal=False`` (the array-state baselines' default) skips the
+    per-row log entirely: nothing mirrors their slabs to a device yet, and
+    on the replay hot path a million no-op stamps are real wall time.
+    Pass ``journal=True`` (the default) to turn the dirty-row protocol on
+    for slabs a device backend will scatter-sync.
+    """
+
+    def __init__(self, n_slots: int, journal: bool = True, **specs):
+        self.n_slots = n_slots
+        self._specs = dict(specs)
+        for name, (dtype, fill) in specs.items():
+            setattr(self, name, np.full(n_slots, fill, dtype=dtype))
+        self.log = MutationJournal() if journal else None
+
+    @property
+    def version(self) -> int | None:
+        return None if self.log is None else self.log.version
+
+    def dirty_since(self, version: int) -> set[int] | None:
+        return None if self.log is None else self.log.dirty_since(version)
+
+    def touch(self, slot: int):
+        """Record that row ``slot`` was mutated."""
+        if self.log is not None:
+            self.log.stamp(int(slot))
+
+    def touch_rows(self, slots):
+        """Stamp a batch of mutated rows (vectorized hooks)."""
+        if self.log is not None:
+            for s in slots:
+                self.log.stamp(int(s))
+
+    def clear(self, slot: int):
+        """Reset every field of ``slot`` to its fill value."""
+        for name, (_, fill) in self._specs.items():
+            getattr(self, name)[slot] = fill
+        self.touch(slot)
+
+
 class PolicyTable:
     """Journaled slot/topic scoring slabs (see module docstring)."""
 

@@ -33,6 +33,7 @@ similarity work and simply delegates.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from typing import TYPE_CHECKING, Callable
 
@@ -51,6 +52,30 @@ PolicyFactory = Callable[[int, ResidentStore], "Policy"]
 # reference backend scan, so scoring-engine accumulation order can never
 # flip a decision (see run_policy_batched)
 _EPS = 1e-4
+
+
+def with_seed(factory: PolicyFactory, seed: int | None) -> PolicyFactory:
+    """Bind a deterministic ``seed`` into a policy factory.
+
+    Factories that expose a ``seed`` parameter (everything built by
+    :func:`default_factories`, covering the RNG-bearing baselines LeCaR /
+    RANDOM / LHD / TinyLFU's sketch) get it bound; plain ``(capacity,
+    store)`` factories pass through untouched, so callers can thread one
+    seed through a mixed factory dict without per-policy wiring."""
+    if seed is None:
+        return factory
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):          # builtins/partials without sig
+        return factory
+    if "seed" not in params:
+        return factory
+
+    def seeded(capacity, store):
+        return factory(capacity, store, seed=seed)
+
+    seeded.__name__ = getattr(factory, "__name__", "policy")
+    return seeded
 
 
 def hr_full(trace: Trace) -> float:
@@ -89,11 +114,11 @@ def _finish(stats: Stats, cache: "SemanticCache", trace: Trace,
 def run_policy(trace: Trace, capacity: int, factory: PolicyFactory,
                hit_mode: str = "content", tau_hit: float = 0.85,
                name: str | None = None, backend: str = "numpy",
-               use_pallas: bool = True) -> Stats:
+               use_pallas: bool = True, seed: int | None = None) -> Stats:
     """Replay ``trace`` through a :class:`SemanticCache` one request at a
     time — the reference protocol every policy is compared under."""
-    cache = _make_cache(trace, capacity, factory, hit_mode, tau_hit,
-                        backend, use_pallas)
+    cache = _make_cache(trace, capacity, with_seed(factory, seed), hit_mode,
+                        tau_hit, backend, use_pallas)
     stats = Stats(policy=name or getattr(cache.policy, "name",
                                          factory.__name__),
                   capacity=capacity, requests=len(trace.requests))
@@ -108,7 +133,8 @@ def run_policy(trace: Trace, capacity: int, factory: PolicyFactory,
 def run_policy_batched(trace: Trace, capacity: int, factory: PolicyFactory,
                        hit_mode: str = "semantic", tau_hit: float = 0.85,
                        name: str | None = None, backend: str = "numpy",
-                       chunk: int = 512, use_pallas: bool = True) -> Stats:
+                       chunk: int = 512, use_pallas: bool = True,
+                       seed: int | None = None) -> Stats:
     """Exact incremental batched replay (one fused launch per chunk).
 
     The chunk-start ``decide_batch`` snapshot supplies every query's
@@ -140,9 +166,9 @@ def run_policy_batched(trace: Trace, capacity: int, factory: PolicyFactory,
     if hit_mode == "content":
         return run_policy(trace, capacity, factory, hit_mode=hit_mode,
                           tau_hit=tau_hit, name=name, backend=backend,
-                          use_pallas=use_pallas)
-    cache = _make_cache(trace, capacity, factory, hit_mode, tau_hit,
-                        backend, use_pallas)
+                          use_pallas=use_pallas, seed=seed)
+    cache = _make_cache(trace, capacity, with_seed(factory, seed), hit_mode,
+                        tau_hit, backend, use_pallas)
     stats = Stats(policy=name or getattr(cache.policy, "name",
                                          factory.__name__),
                   capacity=capacity, requests=len(trace.requests))
@@ -210,24 +236,40 @@ def run_policy_batched(trace: Trace, capacity: int, factory: PolicyFactory,
 
 def run_many(trace: Trace, capacity: int,
              factories: dict[str, PolicyFactory], batched: bool = False,
+             arena: bool = False, seed: int | None = None,
              **kw) -> list[Stats]:
-    """Run every factory under identical settings; ``batched=True`` routes
-    through :func:`run_policy_batched` (forwarding e.g. ``chunk=``).  The
-    batched-only kwargs are dropped when ``batched=False`` so callers can
-    toggle the flag without editing their kwargs."""
+    """Run every factory under identical settings.
+
+    ``arena=True`` routes the whole dict through the one-pass multi-policy
+    arena (:func:`repro.core.arena.run_arena`): one trace pass, one stacked
+    snapshot launch per chunk, bit-identical decisions to the sequential
+    replays.  ``batched=True`` (sequential) routes each policy through
+    :func:`run_policy_batched` (forwarding e.g. ``chunk=``); the
+    batched-only kwargs are dropped when neither flag is set so callers
+    can toggle without editing their kwargs.  ``seed`` is bound into every
+    factory that accepts one (see :func:`with_seed`)."""
+    if arena:
+        from .arena import run_arena
+        return run_arena(trace, capacity, factories, seed=seed, **kw)
     if batched:
         runner = run_policy_batched
     else:
         runner = run_policy
         kw.pop("chunk", None)
-    return [runner(trace, capacity, f, name=n, **kw)
+    return [runner(trace, capacity, f, name=n, seed=seed, **kw)
             for n, f in factories.items()]
 
 
 def default_factories(include_belady: bool = True,
-                      include_extra: bool = False) -> dict[str, PolicyFactory]:
-    """Paper baseline set (§4.2) + RAC variants."""
-    from .policies import BASELINES
+                      include_extra: bool = False,
+                      seed: int | None = None) -> dict[str, PolicyFactory]:
+    """Paper baseline set (§4.2) + RAC variants.
+
+    Every baseline factory exposes a ``seed`` kwarg; ``seed=`` here binds a
+    default so the RNG-bearing policies (LeCaR, RANDOM, LHD, TinyLFU's
+    sketch) are reproducible across reruns without per-policy wiring (a
+    per-run ``run_many(seed=...)`` still overrides it)."""
+    from .policies import BASELINES, RNG_BASELINES
     from .rac import RAC_VARIANTS, make_rac
 
     paper_baselines = ["FIFO", "LRU", "CLOCK", "TTL", "TinyLFU", "ARC",
@@ -240,7 +282,14 @@ def default_factories(include_belady: bool = True,
     fac: dict[str, PolicyFactory] = {}
     for n in names:
         cls = BASELINES[n]
-        fac[n] = (lambda cap, store, _c=cls: _c(cap, store))
+        rng = n in RNG_BASELINES
+
+        def f(cap, store, seed=seed, _c=cls, _rng=rng):
+            kw = {"seed": seed} if (_rng and seed is not None) else {}
+            return _c(cap, store, **kw)
+
+        f.__name__ = n
+        fac[n] = f
     for n, kwargs in RAC_VARIANTS.items():
         if n in ("RAC", "RAC w/o TP", "RAC w/o TSI") or include_extra:
             fac[n] = make_rac(**kwargs)

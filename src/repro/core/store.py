@@ -63,6 +63,16 @@ class MutationJournal:
         while len(self._journal) > self.maxlen:
             self._base = self._journal.popleft()[0]
 
+    def bump(self):
+        """Advance the version WITHOUT recording the row — the cheap path
+        for owners whose mirrors never scatter (e.g. the arena's per-view
+        journals, where a flagged fallback re-upload is fine).  Staleness
+        detection stays exact: the base moves with the version, so
+        ``dirty_since`` answers the conservative ``None`` (full upload)
+        for every version that predates the bump."""
+        self.version = next(_STAMP)
+        self._base = self.version
+
     def dirty_since(self, version: int) -> set[int] | None:
         """Rows mutated after ``version``, or None if unanswerable.
 

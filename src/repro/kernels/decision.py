@@ -74,3 +74,24 @@ def victim_value_pallas(tsi: jnp.ndarray, tid: jnp.ndarray,
         interpret=interpret,
     )(jnp.asarray(t_now, jnp.int32).reshape(1), tsi, tid, occ,
       tp_last.astype(jnp.float32), t_last.astype(jnp.int32))
+
+
+def victim_value_multi_pallas(tsi: jnp.ndarray, tid: jnp.ndarray,
+                              occ: jnp.ndarray, tp_last: jnp.ndarray,
+                              t_last: jnp.ndarray, t_now, alpha: float, *,
+                              interpret: bool = True):
+    """Policy-stacked victim scoring: one dispatch scores P slot tables.
+
+    All slot-axis inputs carry a leading policy axis — tsi/tid/occ
+    ``(P, N)``, the topic tables ``(P, T)`` — and the policy axis is
+    walked grid-sequentially (``lax.map``) inside the single dispatch, so
+    each slice runs the ``victim_value`` kernel unchanged and the arena
+    pays one host→device round-trip for all P policies.  ``t_now`` and
+    ``alpha`` are shared across policies (one simulated clock)."""
+
+    def one(args):
+        tsi_p, tid_p, occ_p, tp_p, tl_p = args
+        return victim_value_pallas(tsi_p, tid_p, occ_p, tp_p, tl_p,
+                                   t_now, alpha, interpret=interpret)
+
+    return jax.lax.map(one, (tsi, tid, occ, tp_last, t_last))

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .decision import BN as _VV_BN, victim_value_pallas
+from .decision import (BN as _VV_BN, victim_value_multi_pallas,
+                       victim_value_pallas)
 from .decode_attention import decode_attention_pallas
 from .flash_attention import BQ as _FA_BQ, flash_attention_pallas
 from .rac_value import BN as _RV_BN, rac_value_pallas
@@ -71,6 +72,51 @@ def sim_top1(queries, candidates, n_valid=None, *, use_pallas: bool = True,
         n_valid = candidates.shape[0]
     return _sim_top1_jit(queries, candidates, jnp.int32(n_valid),
                          use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_top1_multi_raw(queries, slabs, n_valid, *, use_pallas: bool = True,
+                       interpret: bool | None = None):
+    """Un-jitted policy-stacked Top-1 body shared by :func:`sim_top1_multi`
+    and the sharded backend (which runs it per shard inside ``shard_map``).
+
+    ``slabs`` is ``(P, N, D)`` — one resident slab per policy — and
+    ``n_valid`` ``(P,)`` the per-policy runtime resident counts.  The
+    pallas path walks the policy axis grid-sequentially (``lax.map``) so
+    the whole stack is one dispatch; the jnp-oracle path vmaps.  Per-row
+    scores are computed by the same kernel math as :func:`sim_top1_raw`
+    regardless of which rows share the launch, so each policy's Top-1
+    *decision* is the one its own single-slab launch would have made."""
+    if use_pallas:
+        def one(args):
+            slab, nv = args
+            return sim_top1_raw(queries, slab, nv, use_pallas=True,
+                                interpret=interpret)
+
+        return jax.lax.map(one, (slabs, n_valid))
+    return jax.vmap(
+        lambda slab, nv: ref.sim_top1_ref(queries, slab, nv))(slabs, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _sim_top1_multi_jit(queries, slabs, n_valid, *, use_pallas, interpret):
+    return sim_top1_multi_raw(queries, slabs, n_valid,
+                              use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_top1_multi(queries, slabs, n_valid=None, *, use_pallas: bool = True,
+                   interpret: bool | None = None):
+    """Policy-stacked Top-1 retrieval: (B,D)x(P,N,D) -> ((P,B), (P,B)).
+
+    The batched-over-policy variant of :func:`sim_top1` behind the
+    multi-policy arena: ONE dispatch scores a query chunk against every
+    policy's resident slab, with a per-policy runtime ``n_valid`` vector
+    masking each slab's free tail (no recompiles as fill levels drift
+    apart)."""
+    if n_valid is None:
+        n_valid = np.full(slabs.shape[0], slabs.shape[1], dtype=np.int32)
+    return _sim_top1_multi_jit(queries, slabs,
+                               jnp.asarray(n_valid, jnp.int32),
+                               use_pallas=use_pallas, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -152,6 +198,37 @@ def victim_value(tsi, tid, occ, tp_last, t_last, t_now, *, alpha: float,
     return victim_value_raw(tsi, tid, occ, tp_last, t_last,
                             jnp.int32(t_now), alpha=alpha,
                             use_pallas=use_pallas, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "use_pallas",
+                                             "interpret"))
+def victim_value_multi(tsi, tid, occ, tp_last, t_last, t_now, *,
+                       alpha: float, use_pallas: bool = True,
+                       interpret: bool | None = None):
+    """Policy-stacked occupancy-masked Eq.1: the victim-score leg of the
+    arena's batched-over-policy decision surface.
+
+    ``tsi``/``tid``/``occ`` are ``(P, N)`` slot tables, ``tp_last``/
+    ``t_last`` ``(P, T)`` topic tables; returns ``(P, N)`` victim values
+    (free slots ``+inf``) from one dispatch — the multi-policy analogue of
+    :func:`victim_value`, for policy sets whose eviction scoring is
+    table-driven (stacked RAC variants)."""
+    if not use_pallas:
+        return jax.vmap(
+            lambda a, b, c, d, e: ref.victim_value_ref(
+                a, b, c, d, e, jnp.int32(t_now), alpha)
+        )(tsi, tid, occ, tp_last, t_last)
+    interp = _is_cpu() if interpret is None else interpret
+    n = tsi.shape[1]
+    ts = _pad_to(tsi.astype(jnp.float32), 1, _VV_BN)
+    ti = _pad_to(tid.astype(jnp.int32), 1, _VV_BN)
+    oc = _pad_to(occ.astype(jnp.int32), 1, _VV_BN)      # pad rows score +inf
+    out = victim_value_multi_pallas(ts, ti, oc,
+                                    tp_last.astype(jnp.float32),
+                                    t_last.astype(jnp.int32),
+                                    jnp.int32(t_now), alpha,
+                                    interpret=interp)
+    return out[:, :n]
 
 
 def fused_decide_raw(queries, slab, n_valid, reps, n_topics, tsi, tid, occ,

@@ -1,0 +1,449 @@
+"""Multi-policy arena + array-state policy guarantees.
+
+The PR acceptance surface:
+
+  - every array-state baseline makes bit-identical hit/miss/eviction
+    decisions (including the eviction *sequence*) to its legacy host-loop
+    counterpart (``repro.core.legacy_policies``);
+  - the one-pass arena (``run_arena``) reproduces sequential legacy
+    ``run_many`` counts for every baseline across content/semantic hit
+    modes x chunk sizes {1, 7, 512} x numpy/kernel backends (plus the
+    sharded backend's single-device fallback and, in a subprocess, its
+    4-device shard_map merge);
+  - the vectorized batch hooks leave the same policy state as the scalar
+    loop (hypothesis property test on random traces);
+  - ``seed`` threads from ``run_many``/``default_factories`` into the
+    RNG-bearing policies.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (LEGACY_BASELINES, SynthConfig, default_factories,
+                        run_many, run_policy, synthetic_trace)
+from repro.core.arena import ArenaStore, run_arena
+from repro.core.policies import BASELINES
+from repro.core.store import ResidentStore
+from repro.core.types import Request, Trace
+
+ALL_NAMES = sorted(BASELINES)
+
+
+# --------------------------------------------------------------- helpers
+def _trace_from_cids(cids, dim=8):
+    reqs = []
+    for t, c in enumerate(cids):
+        e = np.zeros(dim, np.float32)
+        e[c % dim] = 1.0
+        reqs.append(Request(t=t, cid=int(c), emb=e))
+    return Trace(requests=reqs).with_next_use()
+
+
+def _drive(cls, tr, capacity, batch_hits=False, **kw):
+    """Manual Alg.1 drive -> (hits, eviction sequence).  ``batch_hits``
+    routes runs of consecutive hits through ``on_hit_batch``."""
+    store = ResidentStore(capacity, 8)
+    pol = cls(capacity, store, **kw)
+    ev, hits = [], 0
+    pc, pr, pt = [], [], []
+    for req in tr.requests:
+        if req.cid in store:
+            hits += 1
+            if batch_hits:
+                pc.append(req.cid)
+                pr.append(req)
+                pt.append(req.t)
+                continue
+            pol.on_hit(req.cid, req, req.t)
+            continue
+        if pc:
+            pol.on_hit_batch(pc, pr, pt)
+            pc, pr, pt = [], [], []
+        store.insert(req.cid, req.emb)
+        pol.on_admit(req.cid, req, req.t)
+        while len(store) > capacity:
+            v = pol.victim(req.t)
+            store.remove(v)
+            ev.append(v)
+    if pc:
+        pol.on_hit_batch(pc, pr, pt)
+    return hits, ev
+
+
+def _legacy_facs(names):
+    return {n: (lambda c, s, _c=LEGACY_BASELINES[n]: _c(c, s))
+            for n in names}
+
+
+def _array_facs(names):
+    return {n: (lambda c, s, _c=BASELINES[n]: _c(c, s)) for n in names}
+
+
+def _counts(stats):
+    return [(s.policy, s.hits, s.misses, s.evictions) for s in stats]
+
+
+# ------------------------------------- array vs legacy (policy protocol)
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_array_policy_matches_legacy_eviction_sequence(name, rng):
+    """Stronger than counts: the full eviction SEQUENCE must match, for
+    scalar and batched hit delivery alike."""
+    for trial in range(6):
+        cids = rng.integers(0, 20 + 8 * trial, size=400).tolist()
+        cap = [3, 5, 10, 17, 2, 29][trial]
+        tr = _trace_from_cids(cids)
+        ref = _drive(LEGACY_BASELINES[name], tr, cap)
+        assert _drive(BASELINES[name], tr, cap) == ref
+        assert _drive(BASELINES[name], tr, cap, batch_hits=True) == ref
+
+
+@pytest.mark.parametrize("name", ["FIFO", "LRU", "TTL", "LFU", "LRU-2",
+                                  "GDSF", "Belady"])
+def test_victim_scores_agrees_with_fast_victim(name, rng):
+    """The score-ordered policies carry two encodings of their eviction
+    order: the ``victim_scores`` lexicographic keys (the generic masked
+    argmin in ``ArrayPolicy.victim``) and the sentinel-forget fast
+    ``victim``.  They must elect the same cid from any reachable state."""
+    import copy
+
+    from repro.core.policies import ArrayPolicy
+    cids = rng.integers(0, 40, size=250).tolist()
+    tr = _trace_from_cids(cids)
+    store = ResidentStore(10, 8)
+    pol = BASELINES[name](10, store)
+    for req in tr.requests:
+        if req.cid in store:
+            pol.on_hit(req.cid, req, req.t)
+            continue
+        store.insert(req.cid, req.emb)
+        pol.on_admit(req.cid, req, req.t)
+        if len(store) > 10:
+            if pol.victim_scores(req.t) is not None:
+                p2 = copy.deepcopy(pol)
+                generic = ArrayPolicy.victim(p2, req.t)
+                assert generic == pol.victim(req.t)
+                store.remove(generic)
+            else:
+                store.remove(pol.victim(req.t))
+
+
+@pytest.mark.parametrize("name", ["LRU", "LFU", "ARC", "S3-FIFO", "TinyLFU"])
+def test_on_admit_batch_matches_scalar(name, rng):
+    """Batched admission (no capacity pressure) leaves the same state as
+    the scalar loop: subsequent decisions on a shared tail must agree."""
+    warm = [Request(t=t, cid=c, emb=np.eye(8, dtype=np.float32)[c % 8])
+            for t, c in enumerate(range(12))]
+    tail = rng.integers(0, 30, size=200).tolist()
+    tr = _trace_from_cids(tail)
+
+    def finish(pol, store):
+        ev, hits = [], 0
+        for req in tr.requests:
+            req.t += len(warm)
+            if req.cid in store:
+                hits += 1
+                pol.on_hit(req.cid, req, req.t)
+            else:
+                store.insert(req.cid, req.emb)
+                pol.on_admit(req.cid, req, req.t)
+                while len(store) > 20:
+                    v = pol.victim(req.t)
+                    store.remove(v)
+                    ev.append(v)
+            req.t -= len(warm)
+        return hits, ev
+
+    outs = []
+    for batched in (False, True):
+        store = ResidentStore(20, 8)
+        pol = BASELINES[name](20, store)
+        for r in warm:
+            store.insert(r.cid, r.emb)
+        if batched:
+            pol.on_admit_batch([r.cid for r in warm], warm,
+                               [r.t for r in warm])
+        else:
+            for r in warm:
+                pol.on_admit(r.cid, r, r.t)
+        outs.append(finish(pol, store))
+    assert outs[0] == outs[1]
+
+
+# ------------------------------------------------- arena parity matrix
+@pytest.fixture(scope="module")
+def trace_short():
+    return synthetic_trace(SynthConfig(trace_len=500, seed=11))
+
+
+@pytest.fixture(scope="module")
+def legacy_ref(trace_short):
+    """Sequential legacy run_policy counts per (backend, hit_mode)."""
+    memo = {}
+
+    def get(backend, hit_mode):
+        key = (backend, hit_mode)
+        if key not in memo:
+            stats = [run_policy(trace_short, 40, f, name=n,
+                                hit_mode=hit_mode, backend=backend,
+                                use_pallas=False)
+                     for n, f in _legacy_facs(ALL_NAMES).items()]
+            memo[key] = _counts(stats)
+        return memo[key]
+
+    return get
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+@pytest.mark.parametrize("hit_mode", ["content", "semantic"])
+@pytest.mark.parametrize("chunk", [1, 7, 512])
+def test_arena_parity_matrix(trace_short, legacy_ref, backend, hit_mode,
+                             chunk):
+    """The acceptance matrix: one arena pass over EVERY baseline is
+    bit-identical to the sequential legacy replays."""
+    stats = run_arena(trace_short, 40, _array_facs(ALL_NAMES),
+                      hit_mode=hit_mode, backend=backend, chunk=chunk,
+                      use_pallas=False)
+    assert _counts(stats) == legacy_ref(backend, hit_mode)
+
+
+def test_arena_includes_rac_variants(trace_short):
+    """RAC rides the arena unchanged (policy hooks are generic): counts
+    match its own sequential facade replay, per variant."""
+    from repro.core.rac import make_rac
+    facs = {"RAC": make_rac(), "RAC w/o TP": make_rac(use_tp=False)}
+    seq = run_many(trace_short, 40, facs, hit_mode="semantic")
+    arena = run_many(trace_short, 40, facs, arena=True, hit_mode="semantic")
+    assert _counts(seq) == _counts(arena)
+
+
+def test_arena_sharded_backend_fallback(trace_short):
+    """backend="sharded" (single-device per-shard loop + argmax merge)
+    makes the same decisions as the numpy arena and the sequential runs."""
+    ref = run_arena(trace_short, 40, _array_facs(["LRU", "TTL", "LHD"]),
+                    hit_mode="semantic", backend="numpy")
+    stats = run_arena(trace_short, 40, _array_facs(["LRU", "TTL", "LHD"]),
+                      hit_mode="semantic", backend="sharded",
+                      use_pallas=False)
+    assert _counts(stats) == _counts(ref)
+
+
+def test_run_many_arena_flag(trace_short):
+    """run_many(arena=True) is the documented entry point."""
+    facs = _array_facs(["LRU", "FIFO"])
+    a = run_many(trace_short, 40, facs, arena=True, hit_mode="content")
+    b = run_many(trace_short, 40, facs, hit_mode="content")
+    assert _counts(a) == _counts(b)
+    assert a[0].hr_full == b[0].hr_full
+    assert a[0].wall_s > 0
+
+
+# --------------------------------------------------- stacked launch paths
+def _assert_same_top1_decisions(nc, ns, kc, ks):
+    """Engines must agree on every decision-relevant answer: identical
+    winners wherever the best similarity is positive, and agreement that
+    nothing clears any positive gate elsewhere (a zeroed free slot may
+    out-score a negative real best on one engine and not the other — both
+    are misses at any sensible tau_hit, cf. the backend docstrings)."""
+    pos = np.asarray(ns) > 0
+    np.testing.assert_array_equal(pos, np.asarray(ks) > 0)
+    np.testing.assert_array_equal(np.asarray(nc)[pos], np.asarray(kc)[pos])
+    np.testing.assert_allclose(np.asarray(ns)[pos], np.asarray(ks)[pos],
+                               atol=1e-5)
+
+
+def test_top1_multi_backends_agree(rng):
+    """numpy / kernel / sharded top1_multi make identical per-policy Top-1
+    decisions over one stacked arena slab."""
+    from repro.cache.backends import KernelBackend, NumpyBackend
+    from repro.cache.sharded import ShardedKernelBackend
+    dim = 32
+    arena = ArenaStore(3, 50, dim, track_rows=True)
+    for p, n in enumerate((40, 51, 3)):
+        embs = rng.standard_normal((n, dim)).astype(np.float32)
+        embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+        for i in range(n):
+            arena.views[p].insert(1000 * p + i, embs[i])
+    q = rng.standard_normal((9, dim)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    nc, ns = NumpyBackend().top1_multi(arena, q)
+    assert nc.shape == ns.shape == (3, 9)
+    assert (ns[0] > 0).any() and (ns[1] > 0).any()
+    for be in (KernelBackend(use_pallas=False),
+               ShardedKernelBackend(n_shards=2, use_pallas=False)):
+        kc, ks = be.top1_multi(arena, q)
+        _assert_same_top1_decisions(nc, ns, kc, ks)
+
+
+def test_kernel_top1_multi_tracks_mutations(rng):
+    """The stacked device mirror follows inserts/removals (dirty-row
+    scatter keyed on the arena's flat journal)."""
+    from repro.cache.backends import KernelBackend, NumpyBackend
+    dim = 16
+    arena = ArenaStore(2, 20, dim, track_rows=True)
+    embs = rng.standard_normal((30, dim)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+    for i in range(10):
+        arena.views[0].insert(i, embs[i])
+        arena.views[1].insert(100 + i, embs[i + 10])
+    kb = KernelBackend(use_pallas=False)
+    nb = NumpyBackend()
+    q = embs[20:25]
+    _assert_same_top1_decisions(*nb.top1_multi(arena, q),
+                                *kb.top1_multi(arena, q))
+    arena.views[0].remove(3)
+    arena.views[1].insert(999, q[0])
+    nc, ns = nb.top1_multi(arena, q)
+    assert nc[1, 0] == 999 and ns[1, 0] > 0.99   # the fresh row must win
+    _assert_same_top1_decisions(nc, ns, *kb.top1_multi(arena, q))
+    assert kb._arena_mirror.stats["incremental"] >= 1
+
+
+def test_sharded_top1_multi_shard_map_in_subprocess():
+    """4-device mesh: the stacked per-shard launch + argmax merge equals
+    the numpy oracle."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4").strip()
+import numpy as np
+from repro.core.arena import ArenaStore
+from repro.cache.backends import NumpyBackend
+from repro.cache.sharded import ShardedKernelBackend
+rng = np.random.default_rng(5)
+P, cap, dim = 3, 97, 64
+arena = ArenaStore(P, cap, dim, track_rows=True)
+for p in range(P):
+    n = [60, 97, 5][p]
+    embs = rng.standard_normal((n, dim)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+    for i in range(n):
+        arena.views[p].insert(1000 * p + i, embs[i])
+q = rng.standard_normal((13, dim)).astype(np.float32)
+q /= np.linalg.norm(q, axis=1, keepdims=True)
+nb = NumpyBackend()
+sb = ShardedKernelBackend(n_shards=4, use_pallas=False)
+assert sb.mesh() is not None
+def check():
+    nc, ns = nb.top1_multi(arena, q)
+    sc, ss = sb.top1_multi(arena, q)
+    pos = ns > 0
+    np.testing.assert_array_equal(pos, ss > 0)
+    np.testing.assert_array_equal(nc[pos], sc[pos])
+    np.testing.assert_allclose(ns[pos], ss[pos], atol=1e-5)
+check()
+assert sb.sync_stats["full"] == 1, sb.sync_stats
+check()                                     # same version -> cached slab
+assert sb.sync_stats == {"full": 1, "incremental": 0, "rows": 0}
+arena.views[2].remove(2000)
+arena.views[0].insert(7777, q[0])
+check()                                     # 2 dirty rows -> device scatter
+assert sb.sync_stats["full"] == 1, sb.sync_stats
+assert sb.sync_stats["incremental"] == 1, sb.sync_stats
+assert sb.sync_stats["rows"] == 2, sb.sync_stats
+print("OK")
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+# ------------------------------------------------------- seed threading
+def _seedable_facs(names):
+    """Factories following the default_factories convention: a ``seed``
+    kwarg that run_many(seed=...) binds via ``with_seed``."""
+    def make(cls):
+        def f(cap, store, seed=None):
+            kw = {"seed": seed} if seed is not None else {}
+            return cls(cap, store, **kw)
+        f.__name__ = cls.name
+        return f
+
+    return {n: make(BASELINES[n]) for n in names}
+
+
+def test_seed_threads_to_rng_policies(trace_short):
+    facs = _seedable_facs(["RANDOM", "LeCaR"])
+    a = run_many(trace_short, 20, facs, hit_mode="content", seed=1)
+    b = run_many(trace_short, 20, facs, hit_mode="content", seed=1)
+    c = run_many(trace_short, 20, facs, hit_mode="content", seed=2)
+    assert _counts(a) == _counts(b)
+    assert _counts(a) != _counts(c)      # RANDOM's victims must move
+    # arena threads the same seed
+    d = run_many(trace_short, 20, facs, arena=True, hit_mode="content",
+                 seed=2)
+    assert _counts(c) == _counts(d)
+
+
+def test_default_factories_seed_kwarg(trace_short):
+    f1 = default_factories(include_extra=True, seed=7)
+    f2 = default_factories(include_extra=True, seed=7)
+    f3 = default_factories(include_extra=True, seed=8)
+    cnt = lambda fac: _counts(run_many(trace_short, 20,
+                                       {"RANDOM": fac["RANDOM"]},
+                                       hit_mode="content"))
+    assert cnt(f1) == cnt(f2)
+    assert cnt(f1) != cnt(f3)
+
+
+def test_seeded_legacy_matches_seeded_array(trace_short):
+    """Seed threading preserves the legacy parity (same rng streams)."""
+    for name in ("RANDOM", "LeCaR", "LHD", "TinyLFU"):
+        leg = run_policy(trace_short, 20,
+                         lambda c, s, _c=LEGACY_BASELINES[name]:
+                         _c(c, s, seed=3),
+                         hit_mode="content")
+        arr = run_policy(trace_short, 20,
+                         lambda c, s, _c=BASELINES[name]: _c(c, s, seed=3),
+                         hit_mode="content")
+        assert (leg.hits, leg.misses, leg.evictions) == \
+               (arr.hits, arr.misses, arr.evictions)
+
+
+# --------------------------------------------------------- property test
+def test_array_legacy_property_random_traces():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.integers(min_value=0, max_value=30),
+                    min_size=20, max_size=150),
+           st.integers(min_value=2, max_value=12),
+           st.sampled_from(ALL_NAMES))
+    def prop(cids, cap, name):
+        tr = _trace_from_cids(cids)
+        ref = _drive(LEGACY_BASELINES[name], tr, cap)
+        assert _drive(BASELINES[name], tr, cap) == ref
+        assert _drive(BASELINES[name], tr, cap, batch_hits=True) == ref
+
+    prop()
+
+
+def test_arena_property_random_traces():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.integers(min_value=0, max_value=25),
+                    min_size=30, max_size=120),
+           st.integers(min_value=2, max_value=10))
+    def prop(cids, cap):
+        tr = _trace_from_cids(cids)
+        names = ["LRU", "TTL", "ARC", "S3-FIFO", "SIEVE", "Belady"]
+        seq = run_many(tr, cap, _legacy_facs(names), hit_mode="content")
+        arena = run_arena(tr, cap, _array_facs(names), hit_mode="content")
+        assert _counts(seq) == _counts(arena)
+
+    prop()

@@ -186,3 +186,45 @@ def test_fused_decide_composes_the_three_legs(rng):
     np.testing.assert_allclose(
         vv, ref.victim_value_ref(tsi, tid, occ, tp, tl, 700, 0.001),
         atol=1e-5)
+
+
+def test_sim_top1_multi_matches_per_policy(rng):
+    """The policy-stacked Top-1 (one dispatch, per-policy runtime n_valid)
+    equals P independent sim_top1 launches, on both engine paths."""
+    P, N, D, B = 3, 512, 128, 16
+    slabs = jnp.asarray(rng.standard_normal((P, N, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    nv = np.array([100, 512, 1], dtype=np.int32)
+    for use_pallas in (False, True):
+        vals, idx = ops.sim_top1_multi(q, slabs, nv, use_pallas=use_pallas)
+        assert vals.shape == idx.shape == (P, B)
+        for p in range(P):
+            v1, i1 = ops.sim_top1(q, slabs[p], n_valid=int(nv[p]),
+                                  use_pallas=use_pallas)
+            np.testing.assert_array_equal(np.asarray(i1), np.asarray(idx)[p])
+            np.testing.assert_allclose(np.asarray(v1), np.asarray(vals)[p],
+                                       atol=1e-5)
+        # n_valid masks each slab's tail independently
+        assert (np.asarray(idx)[2] == 0).all()
+
+
+def test_victim_value_multi_matches_per_policy(rng):
+    """Stacked occupancy-masked Eq.1 equals P independent victim_value
+    launches (per-policy topic tables, shared clock)."""
+    P, N, T = 3, 2048, 32
+    tsi = jnp.asarray(rng.random((P, N)), jnp.float32)
+    tid = jnp.asarray(rng.integers(-1, T, (P, N)), jnp.int32)
+    occ = jnp.asarray(rng.integers(0, 2, (P, N)), jnp.int32)
+    tp = jnp.asarray(rng.random((P, T)) * 5, jnp.float32)
+    tl = jnp.asarray(rng.integers(0, 500, (P, T)), jnp.int32)
+    for use_pallas in (False, True):
+        vv = ops.victim_value_multi(tsi, tid, occ, tp, tl, 700, alpha=0.01,
+                                    use_pallas=use_pallas)
+        assert vv.shape == (P, N)
+        for p in range(P):
+            v1 = ops.victim_value(tsi[p], tid[p], occ[p], tp[p], tl[p],
+                                  700, alpha=0.01, use_pallas=use_pallas)
+            np.testing.assert_allclose(np.asarray(v1), np.asarray(vv)[p],
+                                       atol=1e-5)
+        free = ~np.asarray(occ, dtype=bool)
+        assert np.isinf(np.asarray(vv)[free]).all()
