@@ -16,7 +16,8 @@ import sys
 from . import (cache_api_bench, decision_path_bench, faithfulness,
                fig1_example, fig2_stress, fig3_real, fig4_ablation,
                fig5_sensitivity, kernel_bench, overhead, policy_arena_bench,
-               roofline, serving_async_bench, sharded_lookup_bench)
+               roofline, serving_async_bench, sharded_lookup_bench,
+               tiered_cache_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -33,6 +34,7 @@ SUITES = {
     "serving_async": lambda: serving_async_bench.main([]),  # admit slot stall
     "decision": lambda: decision_path_bench.main([]),  # fused vs per-request
     "arena": lambda: policy_arena_bench.main([]),  # multi-policy one-pass
+    "tiered": lambda: tiered_cache_bench.main([]),  # device/host/ghost tiers
 }
 
 

@@ -15,13 +15,29 @@ which device backends mirror with dirty-row scatters (the exact batched
 replay and the serving engine's queue scan both ride it).
 
 The facade is *event-driven*: every transition fires a subscribable hook
-(``"hit" | "miss" | "admit" | "evict"``), and admission itself can leave
-the request path — with ``CacheConfig.async_admit`` an
+(``"hit" | "miss" | "admit" | "evict"``, each event tagged with the tier
+that produced it), and admission itself can leave the request path — with
+``CacheConfig.async_admit`` an
 :class:`~repro.cache.async_admit.AsyncAdmitter` queues admissions and a
 background worker (or a deterministic ``flush()`` drain) applies insert +
 eviction scoring off the caller's thread, firing the same hooks and
 metrics.  After a ``flush()`` the state is identical to synchronous
 admission, so replay parity and checkpointing are preserved.
+
+The facade is also *tiered* (``CacheConfig.tiers``, see
+:mod:`repro.cache.tiers` and ``docs/tiering.md``): a host-DRAM
+:class:`~repro.cache.tiers.HostTier` — sized well past the device slab —
+catches device evictions (*demotion*: payload, embedding, and relation
+metadata survive) and serves device misses (*promotion* back through the
+admission path, riding the AsyncAdmitter queue so the request path never
+blocks), while a capacity-bounded ARC-style
+:class:`~repro.cache.tiers.GhostTier` keeps metadata-only records of what
+fell out entirely so a re-admitted entry restores its RAC counters and its
+topic's TP state instead of cold-starting.  Every tier move is a journal
+entry on the same :class:`~repro.core.store.MutationJournal` protocol the
+device mirrors sync against, ``checkpoint()/restore()`` captures all three
+tiers, and with ``tiers=None`` (the default) every decision is
+bit-identical to the single-tier facade.
 
 Usage::
 
@@ -90,12 +106,14 @@ from .backends import (KernelBackend, LookupBackend, NumpyBackend,
                        get_backend)
 from .facade import SemanticCache
 from .sharded import ShardedKernelBackend, ShardedStore
+from .tiers import GhostTier, HostTier, TierManager, TierStats
 from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
-                    CacheMiss, CacheResult, DecisionBatch)
+                    CacheMiss, CacheResult, DecisionBatch, TierConfig)
 
 __all__ = [
     "SemanticCache", "CacheConfig", "CacheHit", "CacheMiss", "CacheResult",
     "CacheEvent", "CacheMetrics", "DecisionBatch", "LookupBackend",
     "NumpyBackend", "KernelBackend", "ShardedKernelBackend", "ShardedStore",
-    "get_backend", "AsyncAdmitter",
+    "get_backend", "AsyncAdmitter", "TierConfig", "TierManager", "TierStats",
+    "HostTier", "GhostTier",
 ]

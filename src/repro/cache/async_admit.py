@@ -107,7 +107,14 @@ class AsyncAdmitter:
 
     def close(self):
         """Flush outstanding work and stop the worker thread (the worker
-        is stopped even when the flush re-raises a drain error)."""
+        is stopped even when the flush re-raises a drain error).
+
+        Deterministic shutdown guarantee: anything submitted *between* the
+        flush and the close mark — e.g. a tier promotion raced in by a
+        concurrent lookup — is still applied.  The background worker
+        drains its queue before exiting; without a worker the final
+        inline drain below covers the same window, so a close can never
+        silently drop a queued admission or tier move."""
         try:
             self.flush()
         finally:
@@ -117,6 +124,7 @@ class AsyncAdmitter:
             if self._worker is not None:
                 self._worker.join(timeout=5)
                 self._worker = None
+            self._drain_inline()            # tail drain: no dropped moves
 
     # ------------------------------------------------------------ consumer
     def _apply(self, item: tuple):

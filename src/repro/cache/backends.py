@@ -79,6 +79,16 @@ class LookupBackend(Protocol):
         peek near ``tau_hit``."""
         ...
 
+    def topk_rows(self, store: ResidentStore, queries: np.ndarray,
+                  rows: np.ndarray, k: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-K restricted to the given store ``rows`` (slot indices) —
+        the K-generalization of :meth:`top1_rows`, behind the host-tier
+        promotion scan and shortlist peeks.  Returns ((B, K) cids, (B, K)
+        sims) sorted descending per query, ties toward the lower row
+        position; ranks past the restriction size are ``(-1, -inf)``."""
+        ...
+
     def rac_value(self, tsi: np.ndarray, tids: np.ndarray,
                   tp_last: np.ndarray, t_last: np.ndarray,
                   alpha: float, t_now: int) -> np.ndarray:
@@ -208,6 +218,26 @@ class NumpyBackend:
         b = np.arange(queries.shape[0])
         return (store.cid[rows[best]].copy(),
                 sims[b, best].astype(np.float64))
+
+    def topk_rows(self, store: ResidentStore, queries: np.ndarray,
+                  rows: np.ndarray, k: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, dtype=np.float32)
+        rows = np.asarray(rows, dtype=np.int64)
+        b = queries.shape[0]
+        cids = np.full((b, k), -1, dtype=np.int64)
+        sims = np.full((b, k), -np.inf, dtype=np.float64)
+        if rows.size == 0:
+            return cids, sims
+        scores = queries @ store.emb[rows].T              # (B, len(rows))
+        # stable descending sort: equal scores keep ascending row position,
+        # matching the kernel merge's lower-candidate-index tie break
+        order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+        kk = order.shape[1]
+        cids[:, :kk] = store.cid[rows[order]]
+        sims[:, :kk] = np.take_along_axis(scores, order,
+                                          axis=1).astype(np.float64)
+        return cids, sims
 
     def top1_multi(self, arena, queries: np.ndarray
                    ) -> tuple[np.ndarray, np.ndarray]:
@@ -354,6 +384,37 @@ class KernelBackend:
         vals = np.asarray(vals[:b], dtype=np.float64)
         idx = np.asarray(idx[:b])
         return store.cid[rows[idx]].copy(), vals
+
+    def topk_rows(self, store: ResidentStore, queries: np.ndarray,
+                  rows: np.ndarray, k: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        from repro.kernels import ops
+        queries = np.asarray(queries, dtype=np.float32)
+        rows = np.asarray(rows, dtype=np.int64)
+        b, n = queries.shape[0], rows.shape[0]
+        out_c = np.full((b, k), -1, dtype=np.int64)
+        out_s = np.full((b, k), -np.inf, dtype=np.float64)
+        if n == 0:
+            return out_c, out_s
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        # same bucketed candidate gather as top1_rows; the kernel's K is
+        # capped at the padded block size (ranks past the restriction come
+        # back -inf and are mapped to (-1, -inf) below)
+        kp = -(-n // 64) * 64
+        cand = np.zeros((kp, store.emb.shape[1]), dtype=np.float32)
+        cand[:n] = store.emb[rows]
+        kk = min(k, kp)
+        vals, idx = ops.sim_topk(qp, cand, kk, n_valid=n,
+                                 use_pallas=self.use_pallas,
+                                 interpret=self.interpret)
+        vals = np.asarray(vals[:b], dtype=np.float64)      # (B, kk)
+        idx = np.asarray(idx[:b])
+        finite = np.isfinite(vals)
+        out_c[:, :kk] = np.where(
+            finite, store.cid[rows[np.minimum(idx, n - 1)]], -1)
+        out_s[:, :kk] = np.where(finite, vals, -np.inf)
+        return out_c, out_s
 
     def top1_multi(self, arena, queries: np.ndarray
                    ) -> tuple[np.ndarray, np.ndarray]:

@@ -47,7 +47,8 @@ from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
 
 PolicyFactory = Callable[[int, ResidentStore], Any]
 
-_MUTABLE_STATE = ("store", "policy", "payloads", "clock", "metrics")
+_MUTABLE_STATE = ("store", "policy", "payloads", "clock", "metrics",
+                  "tiers")
 
 # policy hook attribute -> backend method wired into it (device-side
 # eviction scoring: RAC consumes Eq. 1 values, RadixRAC the masked variant)
@@ -104,6 +105,13 @@ class SemanticCache:
         self._hooks: dict[str, list[Callable[[CacheEvent], None]]] = {}
         self._lock = threading.RLock()     # guards all mutable state
         self._wire_value_backend()
+        # tiered hierarchy (host DRAM tier + ghost metadata) behind the
+        # facade; None = single-tier, bit-identical to the pre-tiering path
+        self.tiers = None
+        if cfg.tiers is not None and (cfg.tiers.host_capacity > 0
+                                      or cfg.tiers.ghost_capacity > 0):
+            from .tiers import TierManager
+            self.tiers = TierManager(cfg.tiers, cfg.dim)
         # event-driven admission: enqueue + background/deterministic drain
         self.admitter = None
         if cfg.async_admit:
@@ -123,10 +131,11 @@ class SemanticCache:
         return fn
 
     def _emit(self, kind: str, cid: int, t: int, sim: float = float("nan"),
-              payload: Any = None):
+              payload: Any = None, tier: str = "device"):
         hooks = self._hooks.get(kind)
         if hooks:
-            ev = CacheEvent(kind=kind, cid=cid, t=t, sim=sim, payload=payload)
+            ev = CacheEvent(kind=kind, cid=cid, t=t, sim=sim,
+                            payload=payload, tier=tier)
             for fn in hooks:
                 fn(ev)
 
@@ -136,6 +145,16 @@ class SemanticCache:
 
     def __contains__(self, cid: int) -> bool:
         return cid in self.store
+
+    def in_host(self, cid: int) -> bool:
+        """Whether ``cid`` currently lives in the host DRAM tier."""
+        return (self.tiers is not None and self.tiers.host is not None
+                and cid in self.tiers.host)
+
+    @property
+    def tier_stats(self) -> dict:
+        """Per-tier counters (empty when running single-tier)."""
+        return {} if self.tiers is None else self.tiers.stats.snapshot()
 
     def _tick(self, t: Optional[int]) -> int:
         if t is None:
@@ -182,12 +201,44 @@ class SemanticCache:
                     cid=hit_cid, sim=best_sim,
                     payload=self.payloads.get(hit_cid), t=t)
             else:
-                self.metrics.misses += 1
-                self._emit("miss", cid, t, best_sim)
-                result = CacheMiss(best_cid=best_cid if np.isfinite(best_sim)
-                                   else -1, best_sim=best_sim, t=t)
+                # tier fall-through: a device miss may still be served from
+                # the host DRAM tier (and promoted back toward the device)
+                result = (self._tier_lookup(emb, cid, t)
+                          if self.tiers is not None else None)
+                if result is None:
+                    self.metrics.misses += 1
+                    self._emit("miss", cid, t, best_sim)
+                    result = CacheMiss(
+                        best_cid=best_cid if np.isfinite(best_sim)
+                        else -1, best_sim=best_sim, t=t)
             self.metrics.lookup_s += time.perf_counter() - t0
         return result
+
+    def _tier_lookup(self, emb: np.ndarray, cid: int,
+                     t: int) -> Optional[CacheHit]:
+        """Host-tier fall-through on a device miss (under the lock).
+
+        Serves the payload straight from host DRAM and promotes the served
+        entry (plus any ``promote_k`` co-promotion candidates that also
+        cleared ``tau_hit``) back through the normal admission path — the
+        :class:`~repro.cache.async_admit.AsyncAdmitter` queue when
+        configured, so the request path never blocks on device eviction
+        scoring.  Ghost metadata rides along via ``revive_ghost`` so the
+        policy's arrival path restores the preserved relation evidence."""
+        served = self.tiers.serve(np.asarray(emb, dtype=np.float32),
+                                  cid=cid, hit_mode=self.cfg.hit_mode,
+                                  tau_hit=self.cfg.tau_hit, t=t)
+        if not served:
+            return None
+        revive = getattr(self.policy, "revive_ghost", None)
+        for pcid, _psim, pemb, ppayload, pmeta in served:
+            if pmeta is not None and revive is not None:
+                revive(pcid, pmeta, rep=pemb)
+            self.admit(pcid, pemb, payload=ppayload, t=t)
+        hcid, sim, _hemb, payload, _meta = served[0]
+        self.metrics.hits += 1
+        self._emit("hit", hcid, t, sim, payload, tier="host")
+        return CacheHit(cid=hcid, sim=sim, payload=payload, t=t)
 
     def peek_batch(self, embs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Raw snapshot Top-1 over a (B, D) query block — one backend call,
@@ -214,8 +265,15 @@ class SemanticCache:
             t_now = self.clock if t is None else t
             table = getattr(self.policy, "table", None)
             alpha = float(getattr(self.policy, "alpha", 0.0))
-            return self.backend.decide_batch(self.store, table, embs,
-                                             alpha=alpha, t_now=t_now)
+            dec = self.backend.decide_batch(self.store, table, embs,
+                                            alpha=alpha, t_now=t_now)
+            if self.tiers is not None and self.tiers.host is not None:
+                # tier-aware fall-through columns: the host tier's Top-1
+                # per query (host-side scoring; the host slab is DRAM-
+                # resident by definition)
+                dec.host_cid, dec.host_sim = \
+                    self.tiers.host.top1_batch(embs)
+            return dec
 
     def peek_rows(self, embs: np.ndarray, cids: Sequence[int]
                   ) -> tuple[np.ndarray, np.ndarray]:
@@ -309,16 +367,32 @@ class SemanticCache:
                 self.metrics.admit_s += time.perf_counter() - t0
                 return evicted
             self.store.insert(cid, emb)
+            if self.tiers is not None:
+                # drop any stale host copy + feed ghost metadata back into
+                # the policy BEFORE on_admit, so the normal arrival path
+                # restores the preserved counters
+                self.tiers.on_admit(cid, self.policy, emb)
             self.policy.on_admit(cid, self._request(cid, emb, t, req), t)
             self.metrics.admissions += 1
             self._emit("admit", cid, t, payload=payload)
             while len(self.store) > self.cfg.capacity:
                 victim = self.policy.victim(t)
+                vemb = (self.store.emb[self.store.slot_of[victim]].copy()
+                        if self.tiers is not None else None)
                 self.store.remove(victim)
                 vp = self.payloads.pop(victim, None)
                 self.metrics.evictions += 1
                 evicted.append(victim)
-                self._emit("evict", victim, t, payload=vp)
+                if self.tiers is not None:
+                    # demote instead of dropping: the host tier keeps the
+                    # payload (and the ghost tier the relation metadata)
+                    meta_fn = getattr(self.policy, "ghost_meta", None)
+                    meta = meta_fn(victim) if meta_fn is not None else None
+                    demoted = self.tiers.demote(victim, vemb, vp, t, meta)
+                    self._emit("evict", victim, t, payload=vp,
+                               tier="host" if demoted else "device")
+                else:
+                    self._emit("evict", victim, t, payload=vp)
             self.metrics.admit_s += time.perf_counter() - t0
         return evicted
 
@@ -392,8 +466,9 @@ class SemanticCache:
         async admissions are applied to the *old* state first, then
         discarded with it."""
         self.flush()
-        restored = copy.deepcopy({k: state[k] for k in _MUTABLE_STATE})
+        keys = [k for k in _MUTABLE_STATE if k in state]   # tolerate older
+        restored = copy.deepcopy({k: state[k] for k in keys})  # snapshots
         with self._lock:
-            for k in _MUTABLE_STATE:
+            for k in keys:
                 setattr(self, k, restored[k])
             self._wire_value_backend()

@@ -466,6 +466,14 @@ class ShardedKernelBackend:
         from .backends import KernelBackend
         return KernelBackend.top1_rows(self, store, queries, rows)
 
+    def topk_rows(self, store: ShardedStore, queries: np.ndarray,
+                  rows: np.ndarray, k: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        # same rationale as top1_rows: a restricted Top-K touches a small
+        # gathered candidate block, so the single-device kernel path wins
+        from .backends import KernelBackend
+        return KernelBackend.topk_rows(self, store, queries, rows, k)
+
     # ------------------------------------------------------------- eviction
     def _build_rac(self, alpha: float):
         import jax

@@ -13,6 +13,30 @@ from typing import Any, Optional, Union
 
 
 @dataclasses.dataclass
+class TierConfig:
+    """Configuration for the tiering subsystem behind the facade
+    (:mod:`repro.cache.tiers`).
+
+    ``host_capacity`` sizes the host-DRAM second tier that catches device
+    evictions (demotion) and serves device misses (promotion back through
+    the admission path); 0 disables it.  ``ghost_capacity`` bounds the
+    metadata-only ghost tier underneath (ARC B1/B2-style: one list for
+    never-promoted demotions, one for promoted-then-re-evicted entries);
+    0 disables ghosts.  ``promote_k`` is the host-tier scan width: the
+    Top-K shortlist scored per miss (K > 1 reserved for prefetch-style
+    co-promotion policies; the serve decision itself is Top-1).
+
+    With ``host_capacity=0`` and ``ghost_capacity=0`` the facade never
+    constructs a tier manager and every decision is bit-identical to the
+    single-tier path.
+    """
+
+    host_capacity: int = 0
+    ghost_capacity: int = 0
+    promote_k: int = 1
+
+
+@dataclasses.dataclass
 class CacheConfig:
     """Configuration for one :class:`~repro.cache.SemanticCache` instance.
 
@@ -44,6 +68,7 @@ class CacheConfig:
     use_pallas: bool = True              # device backends: pallas vs jnp oracle
     backend_kwargs: dict = dataclasses.field(default_factory=dict)
     async_admit: bool | str = False      # False | True (worker) | "sync"
+    tiers: Optional[TierConfig] = None   # None = single-tier (bit-exact)
 
 
 @dataclasses.dataclass
@@ -104,6 +129,11 @@ class DecisionBatch:
     route_tid: "np.ndarray"              # (B,) int64: best topic row or -1
     route_sim: "np.ndarray"              # (B,) float64: rep cosine or -inf
     victim_value: Optional["np.ndarray"] = None   # (n_slots,) float64
+    # tier-aware fall-through (None on single-tier caches): the host tier's
+    # Top-1 per query — a host_sim >= tau_hit means the entry can be served
+    # (and promoted) from host DRAM even though the device tier missed
+    host_cid: Optional["np.ndarray"] = None       # (B,) int64 or None
+    host_sim: Optional["np.ndarray"] = None       # (B,) float64 or None
 
 
 @dataclasses.dataclass
@@ -115,6 +145,9 @@ class CacheEvent:
     t: int
     sim: float = float("nan")
     payload: Any = None
+    tier: str = "device"                 # tier that produced the transition:
+                                         # "device" | "host" (host-tier hit /
+                                         # demoted-not-dropped eviction)
 
 
 @dataclasses.dataclass

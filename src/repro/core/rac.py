@@ -111,6 +111,9 @@ class RACPolicy(Policy):
                                                # than this are eviction-exempt
                  ghost_limit: int = 1 << 18,   # FIFO bound on evicted-entry
                                                # lifetime metadata (g_freq/g_dep)
+                 ghost_topic_limit: int = 4096,
+                                               # FIFO bound on the ghost topic
+                                               # memory (dead topics' TP state)
                  **kw):
         super().__init__(capacity, store)
         assert store is not None, "RAC scores over the resident store"
@@ -136,23 +139,40 @@ class RACPolicy(Policy):
 
         # lifetime relation metadata (Def. 2: freq(q) counts hits "so far in
         # topic s" — a lifetime counter that survives eviction; par(q_t) "is
-        # cached for future accesses").  Bounded FIFO ghosts.
-        self.g_freq: dict[int, float] = {}
-        self.g_dep: dict[int, float] = {}
+        # cached for future accesses").  Bounded FIFO ghosts, kept in the
+        # shared GhostTier structure (deferred import: repro.cache imports
+        # this module through the core package, so a module-level import
+        # here would close the cycle mid-initialization).
+        from repro.cache.tiers import GhostTier
+        # cid -> (freq, dep, tid); batch_div=16 reproduces the historical
+        # amortized drop loop bit-for-bit
+        self.ghosts = GhostTier(ghost_limit, batch_div=16)
         self.ghost_limit = ghost_limit
+        self.ghost_topic_limit = ghost_topic_limit
         self.par: dict[int, int] = {}          # cid -> parent cid (or -1)
         self.children: dict[int, set[int]] = {}  # resident DAG (for pagerank)
 
         self.topics: dict[int, TopicState] = {}
         self._next_tid = 0
-        # ghost topic memory (beyond-paper option)
-        self.ghost_topics: dict[int, tuple[np.ndarray, float, int]] = {}
+        # ghost topic memory (beyond-paper option): tid -> (rep, tp, t_last)
+        self.ghost_topics = GhostTier(ghost_topic_limit)
         self._evictions = 0
         self._pr_scores: dict[int, float] = {}   # cid -> pagerank structural term
         # optional device-side Eq.1 scorer (repro.cache wires the lookup
         # backend's rac_value here); signature
         # (tsi, tids, tp_last, t_last, alpha, t_now) -> values
         self.value_backend = None
+
+    # -- ghost views (the authoritative records live in self.ghosts) -------
+    @property
+    def g_freq(self) -> dict[int, float]:
+        """Lifetime hit counters of evicted entries (read-only view)."""
+        return {c: e[0] for c, e in self.ghosts.items()}
+
+    @property
+    def g_dep(self) -> dict[int, float]:
+        """Lifetime dependency counters of evicted entries (read-only)."""
+        return {c: e[1] for c, e in self.ghosts.items()}
 
     # -- table views (the authoritative arrays live in self.table) ---------
     freq = property(lambda self: self.table.freq)
@@ -308,8 +328,9 @@ class RACPolicy(Policy):
         s = self.store.slot_of[cid]
         if is_admit:
             # restore lifetime counters (ghost metadata) or start fresh
-            self.freq[s] = self.g_freq.pop(cid, 0.0)
-            self.dep[s] = self.g_dep.pop(cid, 0.0)
+            ghost = self.ghosts.pop(cid, None)
+            self.freq[s] = ghost[0] if ghost is not None else 0.0
+            self.dep[s] = ghost[1] if ghost is not None else 0.0
             self.tsi[s] = self.freq[s] + self.lam * self.dep[s]
             self.arrive_t[s] = t
             tid = self._route(req.emb, t)
@@ -430,11 +451,10 @@ class RACPolicy(Policy):
             if not ts.members:
                 # Alg. 5: delete empty topic (optionally remember TP state)
                 if self.topic_memory:
-                    self.ghost_topics[tid] = (ts.rep.copy(),
-                                              float(self.tp_last[tid]),
-                                              int(self.t_last[tid]))
-                    if len(self.ghost_topics) > 4096:
-                        self.ghost_topics.pop(next(iter(self.ghost_topics)))
+                    # bounded by ghost_topic_limit (FIFO drop of the oldest)
+                    self.ghost_topics.put(tid, (ts.rep.copy(),
+                                                float(self.tp_last[tid]),
+                                                int(self.t_last[tid])))
                 del self.topics[tid]
                 self.table.clear_topic(tid)
             elif ts.src == cid:
@@ -442,25 +462,57 @@ class RACPolicy(Policy):
                 ts.dirty = True                 # lazy refresh (Alg. 5 OnEvict)
         # persist lifetime counters as ghost metadata (Def. 2 semantics);
         # par(cid) stays cached (§3.3).  Resident-DAG edges are pruned.
-        self.g_freq[cid] = float(self.freq[s])
-        self.g_dep[cid] = float(self.dep[s])
-        if len(self.g_freq) > self.ghost_limit:
-            # bounded ghosts: drop the oldest entries FIFO until back under
-            # the cap (a limit//16 batch amortizes the dict churn; the max
-            # with the overshoot keeps the bound hard even for tiny limits)
-            drop = max(1, self.ghost_limit // 16,
-                       len(self.g_freq) - self.ghost_limit)
-            for _ in range(drop):
-                old = next(iter(self.g_freq))
-                self.g_freq.pop(old, None)
-                self.g_dep.pop(old, None)
-                self.par.pop(old, None)
+        # The GhostTier enforces the FIFO bound (limit//16 drop batches
+        # amortize the dict churn; the bound stays hard for tiny limits).
+        for old in self.ghosts.put(cid, (float(self.freq[s]),
+                                         float(self.dep[s]), tid)):
+            self.par.pop(old, None)
         p = self.par.get(cid)
         if p is not None and p >= 0 and p in self.children:
             self.children[p].discard(cid)
         self.children.pop(cid, None)            # children keep their cached par
         self.table.clear_slot(s)
         self._pr_scores.pop(cid, None)
+
+    # ------------------------------------------------- tiering integration
+    def ghost_meta(self, cid: int) -> dict | None:
+        """Snapshot the just-forgotten entry's relation evidence for the
+        tier manager (called by the facade right after an eviction, while
+        the ghost record is guaranteed fresh).  Carries the lifetime
+        counters plus the topic's TP state so a ghost revival can rebuild
+        both — even after this policy's own bounded ghosts age it out."""
+        e = self.ghosts.get(cid)
+        if e is None:
+            return None
+        freq, dep, tid = e
+        if tid in self.topics:
+            tp, tl = float(self.tp_last[tid]), int(self.t_last[tid])
+        elif tid in self.ghost_topics:
+            _, tp, tl = self.ghost_topics[tid]
+        else:
+            tp, tl = 0.0, 0
+        return {"freq": freq, "dep": dep, "tid": int(tid),
+                "tp": float(tp), "tl": int(tl)}
+
+    def revive_ghost(self, cid: int, meta: dict, rep=None):
+        """Feed tier-preserved relation evidence back in at re-admission
+        (called by the facade *before* ``on_admit``, so the normal arrival
+        path restores the counters).  The policy's own records win when
+        still present; the tier metadata only fills what aged out."""
+        tid = int(meta.get("tid", -1))
+        if cid not in self.ghosts:
+            for old in self.ghosts.put(cid, (float(meta.get("freq", 0.0)),
+                                             float(meta.get("dep", 0.0)),
+                                             tid)):
+                self.par.pop(old, None)
+        if (self.topic_memory and rep is not None and 0 <= tid
+                and tid < self._next_tid and tid not in self.topics
+                and tid not in self.ghost_topics):
+            # the demoted topic re-enters hot through _route's ghost-topic
+            # revival, carrying its preserved TP state
+            self.ghost_topics.put(
+                tid, (np.asarray(rep, dtype=np.float32).copy(),
+                      float(meta.get("tp", 0.0)), int(meta.get("tl", 0))))
 
 
 def make_rac(**kwargs):

@@ -20,7 +20,8 @@ from .decision import (BN as _VV_BN, victim_value_multi_pallas,
 from .decode_attention import decode_attention_pallas
 from .flash_attention import BQ as _FA_BQ, flash_attention_pallas
 from .rac_value import BN as _RV_BN, rac_value_pallas
-from .similarity_topk import BC as _ST_BC, BQ as _ST_BQ, sim_top1_pallas
+from .similarity_topk import (BC as _ST_BC, BQ as _ST_BQ, sim_top1_pallas,
+                              sim_topk_pallas)
 
 
 def _is_cpu() -> bool:
@@ -71,6 +72,43 @@ def sim_top1(queries, candidates, n_valid=None, *, use_pallas: bool = True,
     if n_valid is None:
         n_valid = candidates.shape[0]
     return _sim_top1_jit(queries, candidates, jnp.int32(n_valid),
+                         use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_topk_raw(queries, candidates, n_valid, k: int, *,
+                 use_pallas: bool = True, interpret: bool | None = None):
+    """Un-jitted Top-K body.  ``k`` is static (it sizes the kernel's
+    revisited output block); ``n_valid`` may be a traced int32 scalar."""
+    if not use_pallas:
+        return ref.sim_topk_ref(queries, candidates, n_valid, k)
+    interp = _is_cpu() if interpret is None else interpret
+    qp = _pad_to(_pad_to(queries, 1, 128), 0, _ST_BQ)
+    cp = _pad_to(_pad_to(candidates, 1, 128), 0, _ST_BC)
+    vals, idx = sim_topk_pallas(qp.astype(jnp.float32),
+                                cp.astype(jnp.float32),
+                                n_valid, k, interpret=interp)
+    return vals[: queries.shape[0]], idx[: queries.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def _sim_topk_jit(queries, candidates, n_valid, *, k, use_pallas, interpret):
+    return sim_topk_raw(queries, candidates, n_valid, k,
+                        use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_topk(queries, candidates, k: int, n_valid=None, *,
+             use_pallas: bool = True, interpret: bool | None = None):
+    """Top-K cosine retrieval: (Q,D)x(N,D) -> (vals (Q,K), idx (Q,K)),
+    sorted descending with ties toward the lower candidate index.
+
+    The K-generalization of :func:`sim_top1` behind the host-tier
+    promotion scan and shortlist peeks.  ``k`` is static per launch shape;
+    ``n_valid`` is the runtime resident count masking the free tail (rows
+    at or past it come back as (-inf, undefined) — callers map them to
+    (-inf, -1))."""
+    if n_valid is None:
+        n_valid = candidates.shape[0]
+    return _sim_topk_jit(queries, candidates, jnp.int32(n_valid), k=int(k),
                          use_pallas=use_pallas, interpret=interpret)
 
 

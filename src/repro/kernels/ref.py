@@ -14,6 +14,18 @@ def sim_top1_ref(queries: jnp.ndarray, candidates: jnp.ndarray,
     return scores.max(axis=1), scores.argmax(axis=1).astype(jnp.int32)
 
 
+def sim_topk_ref(queries: jnp.ndarray, candidates: jnp.ndarray,
+                 n_valid: int, k: int):
+    """queries (Q,D), candidates (N,D) -> (vals (Q,K), idx (Q,K)), sorted
+    descending; ``lax.top_k`` breaks ties toward the lower index, matching
+    the kernel's merge order and a stable descending host sort."""
+    scores = queries.astype(jnp.float32) @ candidates.astype(jnp.float32).T
+    col = jnp.arange(candidates.shape[0])
+    scores = jnp.where(col[None, :] < n_valid, scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True):
     """q (B,H,S,D); k/v (B,Hkv,S,D) -> (B,H,S,D).  fp32 softmax."""

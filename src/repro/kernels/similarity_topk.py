@@ -1,10 +1,18 @@
-"""Pallas TPU kernel: batched cosine-similarity Top-1 retrieval.
+"""Pallas TPU kernels: batched cosine-similarity Top-1 and Top-K retrieval.
 
 This is the semantic cache's hit-determination hot spot (the paper: "hit
 determination itself requires costly similarity computation").  TPU-native
 design: the (queries × candidates) score tile is one MXU matmul per grid
 cell; a running (max, argmax) merge lives in the revisited output block
 while candidate tiles stream HBM→VMEM.
+
+Top-K (``sim_topk_pallas``) generalizes the merge: the revisited output
+block holds the running (K values, K indices) per query, and each
+candidate tile is folded in by K select-and-mask passes over the
+``[running | tile]`` concatenation — K is small (shortlists, promotion
+scans), so the extra VPU work is negligible next to the MXU matmul.
+Ties break toward the lower candidate index, matching a stable descending
+host sort.
 
 ``n_valid`` is a *runtime* scalar delivered through scalar prefetch
 (``PrefetchScalarGridSpec``), so compacted and per-shard stores can mask
@@ -77,5 +85,78 @@ def sim_top1_pallas(queries: jnp.ndarray, candidates: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((q_n,), jnp.float32),
                    jax.ShapeDtypeStruct((q_n,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32).reshape(1), queries, candidates)
+
+def _make_sim_topk_kernel(k: int):
+    """Build a Top-K kernel for a static K (K is a compile-time constant:
+    it sizes the revisited output block)."""
+
+    def _sim_topk_kernel(nv_ref, q_ref, c_ref, val_ref, idx_ref):
+        # grid = (nq, nc); candidate axis is a sequential reduction over a
+        # running per-query Top-K kept in the revisited output block.
+        j = pl.program_id(1)
+        n_valid = nv_ref[0]
+        q = q_ref[...]                                   # (BQ, D)
+        c = c_ref[...]                                   # (BC, D)
+        scores = jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (BQ, BC) on the MXU
+        col = j * BC + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(col < n_valid, scores, -jnp.inf)
+
+        @pl.when(j == 0)
+        def _init():
+            val_ref[...] = jnp.full((BQ, k), -jnp.inf, jnp.float32)
+            idx_ref[...] = jnp.full((BQ, k), 0, jnp.int32)
+
+        # Fold the tile into the running Top-K: K select-and-mask passes
+        # over [running | tile].  The running list is sorted descending
+        # with ties already resolved toward lower candidate index, and it
+        # sits left of the (higher-index) tile columns, so argmax's
+        # first-occurrence tie break keeps "lower candidate index wins"
+        # globally.
+        comb_v = jnp.concatenate([val_ref[...], scores], axis=1)
+        comb_i = jnp.concatenate([idx_ref[...], col], axis=1)
+        new_v, new_i = [], []
+        lane = jax.lax.broadcasted_iota(jnp.int32, comb_v.shape, 1)
+        for _ in range(k):
+            m = jnp.max(comb_v, axis=1)                  # (BQ,)
+            a = jnp.argmax(comb_v, axis=1).astype(jnp.int32)
+            hit = lane == a[:, None]
+            # one-hot max instead of gather: the selected lane's index
+            # (indices are >= 0, so the -1 fill never wins)
+            new_v.append(m)
+            new_i.append(jnp.max(jnp.where(hit, comb_i, -1), axis=1))
+            comb_v = jnp.where(hit, -jnp.inf, comb_v)
+        val_ref[...] = jnp.stack(new_v, axis=1)
+        idx_ref[...] = jnp.stack(new_i, axis=1)
+
+    return _sim_topk_kernel
+
+
+def sim_topk_pallas(queries: jnp.ndarray, candidates: jnp.ndarray,
+                    n_valid, k: int, *, interpret: bool = True):
+    """queries (Q, D), candidates (N, D) padded to tile multiples; returns
+    (vals (Q, K), idx (Q, K)) sorted descending, ties toward the lower
+    candidate index.  ``n_valid`` is a runtime scalar masking the candidate
+    tail; slots past it come back as (-inf, undefined-index) rows that the
+    caller maps to (-inf, -1)."""
+    q_n, d = queries.shape
+    c_n = candidates.shape[0]
+    assert q_n % BQ == 0 and c_n % BC == 0 and d % 128 == 0
+    assert 1 <= k <= c_n
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_n // BQ, c_n // BC),
+        in_specs=[pl.BlockSpec((BQ, d), lambda i, j, nv: (i, 0)),
+                  pl.BlockSpec((BC, d), lambda i, j, nv: (j, 0))],
+        out_specs=[pl.BlockSpec((BQ, k), lambda i, j, nv: (i, 0)),
+                   pl.BlockSpec((BQ, k), lambda i, j, nv: (i, 0))])
+    return pl.pallas_call(
+        _make_sim_topk_kernel(k),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+                   jax.ShapeDtypeStruct((q_n, k), jnp.int32)],
         interpret=interpret,
     )(jnp.asarray(n_valid, jnp.int32).reshape(1), queries, candidates)

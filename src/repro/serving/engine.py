@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache import CacheConfig, SemanticCache
+from repro.cache import CacheConfig, SemanticCache, TierConfig
 from repro.models import Model, build_model, make_decode_step
 from repro.models.config import ModelConfig
 
@@ -55,6 +55,11 @@ class EngineConfig:
                                   # (device sim_top1; sharded = multi-device
                                   #  slab, see repro/cache/sharded.py)
     async_admit: bool = False     # queue admissions, flush at batch bounds
+    host_capacity: int = 0        # host-DRAM tier rows (0 = single-tier);
+                                  # device evictions demote here and host
+                                  # hits promote back via the admit path
+    ghost_capacity: int = 0       # metadata-only ghost tier entries (0 =
+                                  # policy-internal ghosts only)
 
 
 @dataclasses.dataclass
@@ -84,7 +89,11 @@ class ServingEngine:
             tau_hit=ecfg.tau_hit, hit_mode="semantic",
             backend=ecfg.cache_backend, policy="RAC",
             policy_kwargs=policy_kwargs or {},
-            async_admit=ecfg.async_admit))
+            async_admit=ecfg.async_admit,
+            tiers=(TierConfig(host_capacity=ecfg.host_capacity,
+                              ghost_capacity=ecfg.ghost_capacity)
+                   if ecfg.host_capacity > 0 or ecfg.ghost_capacity > 0
+                   else None)))
         self._gen = {"generated_tokens": 0, "batches": 0,
                      "evicted_responses": 0}
         self.cache.subscribe("evict", self._on_evict)
@@ -158,7 +167,8 @@ class ServingEngine:
             waiting = []
             for req in queue:
                 c, s = peeked[req.rid]
-                if s >= ecfg.tau_hit and c in self.cache:
+                if s >= ecfg.tau_hit and (c in self.cache
+                                          or self.cache.in_host(c)):
                     res = self.cache.lookup(req.emb, cid=req.cid,
                                             top1=(c, s))
                     serve_hit(req, res)
@@ -186,6 +196,13 @@ class ServingEngine:
                     np.stack([r.emb for r in queue]))
                 for req, c, s in zip(queue, dec.hit_cid, dec.hit_sim):
                     peeked[req.rid] = (int(c), float(s))
+                if dec.host_cid is not None:
+                    # tiered: a host-resident entry can out-score every
+                    # device row; drain_hits serves it through lookup(),
+                    # which falls through to the host tier and promotes
+                    for req, c, s in zip(queue, dec.host_cid, dec.host_sim):
+                        if float(s) > peeked[req.rid][1]:
+                            peeked[req.rid] = (int(c), float(s))
                 recent.clear()
                 drain_hits()
             elif queue and recent:

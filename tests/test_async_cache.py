@@ -121,6 +121,34 @@ def test_close_reverts_to_inline_admission():
     assert 2 in cache and cache.pending_admits == 0
 
 
+@pytest.mark.parametrize("mode", ["sync", True])
+def test_close_drains_submissions_racing_past_the_flush(mode):
+    """close() hardening: an admission submitted *between* close()'s flush
+    and the closed mark — the window a tier promotion rides in through a
+    concurrent lookup — must still be applied, never silently dropped.
+
+    The race is simulated deterministically: the admitter's flush is
+    wrapped to submit one more item right after the drain completes, so
+    the late item is guaranteed to land inside the window."""
+    cache = SemanticCache(CacheConfig(capacity=8, dim=8, policy="LRU",
+                                      async_admit=mode))
+    cache.admit(1, np.ones(8, np.float32), payload=["early"])
+    adm = cache.admitter
+    orig_flush = adm.flush
+
+    def racing_flush():
+        out = orig_flush()
+        adm.submit(9, np.full(8, 2, np.float32), ["late"], cache.clock + 1,
+                   None)
+        return out
+
+    adm.flush = racing_flush
+    cache.close()
+    assert 1 in cache and 9 in cache          # nothing dropped
+    assert cache.payloads[9] == ["late"]
+    assert len(adm) == 0 and adm.applied == 2
+
+
 def test_capacity_zero_admit_never_leaks_payload():
     """Regression: with capacity<=0 nothing is ever inserted, so the
     payload must not be stored (eviction could never drop it)."""

@@ -54,6 +54,82 @@ def test_sim_top1_n_valid_no_recompile(rng):
     assert _sim_top1_jit._cache_size() == sizes0
 
 
+@pytest.mark.parametrize("k", [1, 4, 16])
+@pytest.mark.parametrize("q_n,c_n,d", [(1, 64, 32), (7, 100, 64),
+                                       (37, 901, 64), (128, 512, 128)])
+def test_sim_topk(rng, q_n, c_n, d, k):
+    """Top-K retrieval (Pallas interpret mode) matches the lax.top_k oracle:
+    descending scores, ties broken toward the lower candidate index."""
+    q = jnp.asarray(rng.standard_normal((q_n, d)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((c_n, d)), jnp.float32)
+    v1, i1 = ops.sim_topk(q, c, k)
+    v2, i2 = ref.sim_topk_ref(q, c, c_n, k)
+    np.testing.assert_allclose(v1, v2, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    # ranks are strictly ordered per row
+    vals = np.asarray(v1)
+    assert (np.diff(vals, axis=1) <= 1e-6).all()
+
+
+@pytest.mark.parametrize("n_valid", [0, 1, 3, 97, 100])
+def test_sim_topk_dynamic_n_valid(rng, n_valid):
+    """Runtime resident count masks the tail; ranks past the restriction
+    come back as -inf with index 0 (callers map them to cid -1)."""
+    k = 8
+    q = jnp.asarray(rng.standard_normal((5, 64)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((100, 64)), jnp.float32)
+    v1, i1 = ops.sim_topk(q, c, k, n_valid=n_valid)
+    if n_valid == 0:
+        assert np.all(np.asarray(v1) == -np.inf)
+        return
+    v2, i2 = ref.sim_topk_ref(q, c, n_valid, k)
+    np.testing.assert_allclose(v1, v2, atol=1e-4)
+    live = np.asarray(v2) > -np.inf
+    np.testing.assert_array_equal(np.asarray(i1)[live], np.asarray(i2)[live])
+    assert np.asarray(i1)[live].max() < n_valid     # free tail never ranks
+
+
+def test_sim_topk_ties_break_low(rng):
+    """Duplicate candidates: every rank is filled and ties resolve toward
+    the lower candidate index, matching the host-side stable argsort."""
+    q = jnp.asarray(rng.standard_normal((3, 64)), jnp.float32)
+    row = rng.standard_normal((1, 64)).astype(np.float32)
+    c = jnp.asarray(np.repeat(row, 16, axis=0), jnp.float32)
+    v, i = ops.sim_topk(q, c, 4)
+    np.testing.assert_array_equal(np.asarray(i),
+                                  np.tile(np.arange(4), (3, 1)))
+    np.testing.assert_allclose(np.asarray(v),
+                               np.repeat(np.asarray(v)[:, :1], 4, axis=1),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("backend_name", ["numpy", "kernel", "sharded"])
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_backend_topk_rows_parity(rng, backend_name, k):
+    """`topk_rows` through every backend agrees with the numpy oracle on a
+    row-restricted store scan (descending, ties to lower row position,
+    ranks past the restriction = (-1, -inf))."""
+    from repro.cache import get_backend
+    from repro.cache.backends import NumpyBackend
+    from repro.core.store import ResidentStore
+
+    store = ResidentStore(24, 64)
+    for cid in range(18):
+        e = rng.standard_normal(64).astype(np.float32)
+        store.insert(cid, e / np.linalg.norm(e))
+    rows = [store.slot_of[c] for c in (0, 3, 5, 7, 11, 16)]
+    q = rng.standard_normal((9, 64)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    oc, os_ = NumpyBackend().topk_rows(store, q, rows, k)
+    bc, bs = get_backend(backend_name).topk_rows(store, q, rows, k)
+    assert bc.shape == bs.shape == (9, k)
+    np.testing.assert_allclose(bs, os_, atol=1e-4)
+    np.testing.assert_array_equal(bc, oc)
+    if k > len(rows):                       # tail ranks are sentinels
+        assert (bc[:, len(rows):] == -1).all()
+        assert np.isneginf(bs[:, len(rows):]).all()
+
+
 @pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 128),
                                          (2, 4, 2, 200, 128),
                                          (1, 8, 2, 300, 128),

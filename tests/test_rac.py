@@ -227,6 +227,29 @@ def test_ghost_limit_tiny_limits_stay_bounded():
             assert len(pol.g_dep) <= limit
 
 
+def test_ghost_topic_limit_bounds_topic_memory():
+    """The topic-memory ghost table (Alg.2 TP revival state) honors the
+    configurable ``ghost_topic_limit`` — it is no longer a hard-coded 4096:
+    a trace cycling through 4x the limit of distinct topics never grows
+    ``ghost_topics`` past the bound, and revival still works inside it."""
+    limit = 8
+    store, pol = _mk(capacity=2, tau_route=0.3, ghost_topic_limit=limit)
+    space = EmbeddingSpace(dim=16, seed=14)
+    for t, cid in enumerate(range(4 * limit)):
+        emb = space.content_embedding(cid, cid).astype(np.float32)
+        _arrive(store, pol, cid, emb, t + 1, 2)
+        assert len(pol.ghost_topics) <= limit
+    assert len(pol.ghost_topics) > 0
+    # a ghost topic inside the bound revives with its TP state (Alg.2):
+    # re-arriving content of a remembered topic must not mint a new tid
+    gid = max(pol.ghost_topics.keys())
+    ntid = pol._next_tid
+    emb = space.content_embedding(4 * limit - 1, 4 * limit - 1)
+    _arrive(store, pol, 4 * limit - 1, emb.astype(np.float32), 200, 2)
+    assert pol._next_tid == ntid            # revived, not re-created
+    assert gid not in pol.ghost_topics or len(pol.ghost_topics) <= limit
+
+
 def test_ghost_restore_still_works_under_limit():
     """A ghost inside the bound still restores its lifetime counters."""
     store, pol = _mk(capacity=2, tau_route=0.3, ghost_limit=8)

@@ -1,0 +1,371 @@
+"""Tiered cache hierarchy (device -> host DRAM -> ghost): unit behavior
+of the tiers, the demote/promote/revive flows through the facade, the
+single-tier bit-exactness guarantee across backends and hit modes, and
+checkpoint/restore round-trips that include tier state."""
+import numpy as np
+import pytest
+
+from repro.cache import (CacheConfig, GhostTier, HostTier, SemanticCache,
+                         TierConfig)
+from repro.core import EmbeddingSpace
+
+
+# --------------------------------------------------------- GhostTier unit
+def test_ghost_tier_fifo_bound_and_drop_report():
+    g = GhostTier(3)
+    assert g.put("a", 1) == [] and g.put("b", 2) == [] and g.put("c", 3) == []
+    assert g.put("d", 4) == ["a"]            # oldest out, reported
+    assert len(g) == 3 and "a" not in g and g["d"] == 4
+    assert list(g.keys()) == ["b", "c", "d"]
+
+
+def test_ghost_tier_update_keeps_insertion_position():
+    g = GhostTier(2)
+    g.put("a", 1)
+    g.put("b", 2)
+    assert g.put("a", 9) == []               # update in place, no drop
+    assert g["a"] == 9
+    assert g.put("c", 3) == ["a"]            # "a" kept its (oldest) slot
+
+
+def test_ghost_tier_batched_drop_amortizes():
+    g = GhostTier(16, batch_div=4)
+    dropped = []
+    for i in range(17):
+        dropped += g.put(i, i)
+    assert dropped == [0, 1, 2, 3]           # one batch of capacity//4
+    assert len(g) == 13
+    assert min(g.keys()) == 4
+
+
+def test_ghost_tier_tiny_capacities_stay_bounded():
+    for cap in (0, 1, 2):
+        g = GhostTier(cap, batch_div=16)     # batch = 0 -> still drops >= 1
+        for i in range(10):
+            g.put(i, i)
+            assert len(g) <= cap
+
+
+# ---------------------------------------------------------- HostTier unit
+def test_host_tier_put_take_roundtrip_is_journaled():
+    ht = HostTier(capacity=4, dim=8)
+    v0 = ht.store.version
+    e = np.arange(8, dtype=np.float32)
+    assert ht.put(3, e, ["payload"], t=1, meta={"freq": 2.0}) == []
+    assert ht.store.version > v0             # demote = journal entry
+    assert 3 in ht and len(ht) == 1
+    v1 = ht.store.version
+    emb, payload, meta = ht.take(3, t=2)
+    assert ht.store.version > v1             # promote = journal entry
+    np.testing.assert_array_equal(emb, e)
+    assert payload == ["payload"] and meta == {"freq": 2.0}
+    assert 3 not in ht and len(ht) == 0      # remove-at-serve
+
+
+def test_host_tier_lru_eviction_by_demote_time():
+    ht = HostTier(capacity=2, dim=4)
+    e = np.ones(4, np.float32)
+    ht.put(10, e, "a", t=5, meta={"tid": 1})
+    ht.put(11, e, "b", t=9, meta=None)
+    dropped = ht.put(12, e, "c", t=7, meta=None)
+    assert dropped == [(10, {"tid": 1})]     # smallest last_t out first
+    assert 10 not in ht and 11 in ht and 12 in ht
+    # insert-then-evict: the re-put itself pushes out the now-coldest 12,
+    # and a fresh timestamp protects 10 on the next demotion
+    assert [c for c, _ in ht.put(10, e, "a", t=20, meta=None)] == [12]
+    assert [c for c, _ in ht.put(13, e, "d", t=21, meta=None)] == [11]
+    assert 10 in ht and 13 in ht
+
+
+def test_host_tier_topk_scores_occupied_rows_only():
+    rng = np.random.default_rng(0)
+    ht = HostTier(capacity=8, dim=16)
+    embs = rng.standard_normal((5, 16)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=1, keepdims=True)
+    for i in range(5):
+        ht.put(i, embs[i], None, t=i, meta=None)
+    cids, sims = ht.topk(embs[2], k=3)
+    assert cids[0, 0] == 2 and sims[0, 0] == pytest.approx(1.0, abs=1e-5)
+    assert set(cids[0].tolist()) <= set(range(5))
+
+
+# ------------------------------------------------- facade flow: demote/promote
+def _space_embs(dim=32, n=24, seed=7):
+    space = EmbeddingSpace(dim=dim, seed=seed)
+    return space, [space.content_embedding(i % 6, i).astype(np.float32)
+                   for i in range(n)]
+
+
+def _tiered(capacity=4, host=16, ghost=64, **kw):
+    return SemanticCache(CacheConfig(
+        capacity=capacity, dim=32, tau_hit=0.85, policy="RAC",
+        tiers=TierConfig(host_capacity=host, ghost_capacity=ghost), **kw))
+
+
+def test_demotion_preserves_payload_and_host_hit_promotes():
+    cache = _tiered()
+    events = []
+    for kind in ("hit", "evict"):
+        cache.subscribe(kind,
+                        lambda ev, k=kind: events.append((k, ev.cid, ev.tier)))
+    _, embs = _space_embs()
+    for i in range(12):
+        assert not cache.lookup(embs[i], cid=i).hit
+        cache.admit(i, embs[i], payload=[f"p{i}"])
+    demoted = [c for c in range(12) if cache.in_host(c)]
+    assert len(demoted) == 8                 # 12 admitted - 4 device-resident
+    assert all(("evict", c, "host") in events for c in demoted)
+    target = demoted[0]
+    r = cache.lookup(embs[target], cid=target)
+    assert r.hit and r.cid == target and r.payload == [f"p{target}"]
+    assert events[-1] == ("hit", target, "host")
+    assert target in cache                   # promoted to the device tier
+    assert not cache.in_host(target)         # remove-at-serve: single copy
+    st = cache.tier_stats
+    assert st["demotions"] >= 12 - 4 and st["host_hits"] == 1
+    assert st["promotions"] == 1
+    assert cache.metrics.hits == 1           # host hits are hits
+
+
+def test_content_mode_host_hit_serves_exact_cid():
+    cache = _tiered(hit_mode="content")
+    _, embs = _space_embs()
+    for i in range(12):
+        cache.admit(i, embs[i], payload=[i])
+    target = next(c for c in range(12) if cache.in_host(c))
+    r = cache.lookup(embs[target], cid=target)
+    assert r.hit and r.cid == target and r.payload == [target]
+    assert target in cache and not cache.in_host(target)
+
+
+def test_promote_k_co_promotes_near_duplicates():
+    space = EmbeddingSpace(dim=32, seed=9)
+    cache = SemanticCache(CacheConfig(
+        capacity=2, dim=32, tau_hit=0.85, policy="LRU",
+        tiers=TierConfig(host_capacity=16, ghost_capacity=0, promote_k=4)))
+    base = space.content_embedding(0, 0).astype(np.float32)
+    close = [space.paraphrase(base, 0, 0, j).astype(np.float32)
+             for j in (1, 2)]
+    far = [space.content_embedding(3 + j, 100 + j).astype(np.float32)
+           for j in range(4)]
+    for cid, e in enumerate([base] + close + far):
+        cache.admit(cid, e, payload=[cid])
+    in_host = [c for c in range(3) if cache.in_host(c)]
+    assert len(in_host) >= 2                 # the near-duplicates demoted
+    r = cache.lookup(base, cid=99)
+    assert r.hit and r.payload == [in_host[0]]   # best host rank served
+    promoted = cache.tier_stats["promotions"]
+    assert promoted >= 2                     # served rank + co-promotions
+    # every promoted entry stays owned somewhere: on device, or demoted
+    # right back when the co-promotions themselves overflow capacity 2
+    for c in in_host:
+        assert c in cache or cache.in_host(c)
+        assert cache.payloads.get(c) == [c] or \
+            cache.tiers.host.payloads.get(c) == [c]
+
+
+def test_async_promotion_rides_the_admit_queue():
+    """The request path never blocks on promotion: a host hit returns the
+    payload immediately and the re-admission is queued, applied at the
+    next flush exactly like any other async admission."""
+    cache = _tiered(async_admit="sync")
+    _, embs = _space_embs()
+    for i in range(12):
+        cache.admit(i, embs[i], payload=[i])
+    cache.flush()
+    target = next(c for c in range(12) if cache.in_host(c))
+    r = cache.lookup(embs[target], cid=target)
+    assert r.hit and r.payload == [target]   # served before any admission
+    assert cache.pending_admits >= 1         # promotion queued, not applied
+    assert target not in cache               # ...so not on device yet
+    assert not cache.in_host(target)         # but already owned by the queue
+    cache.flush()
+    assert target in cache                   # settled at the batch boundary
+    assert cache.tier_stats["promotions"] == 1
+
+
+# ----------------------------------------------------------- ghost revival
+def test_ghost_tier_readmits_demoted_topic_hot():
+    """The acceptance flow: an entry (and its topic) demoted all the way
+    out re-enters *hot* — the tier's ghost metadata outlives the policy's
+    own bounded ghosts, restoring the lifetime freq counter AND the dead
+    topic's TP state (no new topic is minted on re-admission)."""
+    cache = SemanticCache(CacheConfig(
+        capacity=2, dim=32, tau_hit=0.85, policy="RAC",
+        policy_kwargs=dict(ghost_limit=1, ghost_topic_limit=1,
+                           tau_route=0.3),
+        tiers=TierConfig(host_capacity=0, ghost_capacity=64)))
+    space = EmbeddingSpace(dim=32, seed=4)
+    e0 = space.content_embedding(0, 0).astype(np.float32)
+    cache.admit(0, e0, payload=["r0"])
+    for _ in range(3):
+        assert cache.lookup(e0, cid=0).hit   # freq(0) grows to 4
+    pol = cache.policy
+    tid0 = int(pol.topic_of[cache.store.slot_of[0]])
+    # flood with distinct topics at a much later time (topic 0's TP has
+    # decayed to ~0, so Eq.1 evicts cid 0) — ages it out of the policy's
+    # own 1-entry ghost list and 1-entry topic memory
+    for j in range(1, 9):
+        ej = space.content_embedding(j, j).astype(np.float32)
+        cache.admit(j, ej, t=5000 + j)
+    assert 0 not in cache and 0 not in pol.g_freq       # policy forgot
+    assert tid0 not in pol.topics and tid0 not in pol.ghost_topics
+    g = cache.tiers.ghost_get(0)
+    assert g is not None and g["freq"] == 4.0           # the tier did not
+    ntid = pol._next_tid
+    cache.admit(0, e0, payload=["r0-again"])            # re-admission
+    st = cache.tier_stats
+    assert st["ghost_revivals"] == 1
+    s0 = cache.store.slot_of[0]
+    assert pol.freq[s0] == 5.0               # lifetime counter restored (+1)
+    assert pol._next_tid == ntid             # topic revived, not re-created
+    assert int(pol.topic_of[s0]) == tid0
+
+
+def test_ghost_lists_split_arc_style():
+    """B1 holds demoted-never-promoted metadata; a promoted entry that
+    falls all the way out again lands in B2."""
+    cache = _tiered(capacity=2, host=2, ghost=8)
+    _, embs = _space_embs()
+    for i in range(6):
+        cache.admit(i, embs[i], payload=[i])
+    tm = cache.tiers
+    assert len(tm.ghost_b1) > 0 and len(tm.ghost_b2) == 0
+    target = next(c for c in range(6) if cache.in_host(c))
+    assert cache.lookup(embs[target], cid=target).hit   # promote it
+    for i in range(6, 12):                   # flood it out again (late t:
+        cache.admit(i, embs[i], payload=[i], t=5000 + i)   # TP decayed)
+    assert target in tm.ghost_b2             # promoted-then-lost
+    assert cache.tier_stats["ghost_drops"] + len(tm.ghost_b1) \
+        + len(tm.ghost_b2) == cache.tier_stats["ghost_inserts"]
+
+
+# --------------------------------------------------- single-tier bit-exactness
+def _replay(backend, hit_mode, tiers, *, capacity=8, n=80):
+    space = EmbeddingSpace(dim=32, seed=21)
+    bkw = {"n_shards": 2} if backend == "sharded" else {}
+    cache = SemanticCache(CacheConfig(
+        capacity=capacity, dim=32, tau_hit=0.85, hit_mode=hit_mode,
+        backend=backend, use_pallas=False, backend_kwargs=bkw,
+        policy="RAC", tiers=tiers))
+    events = []
+    for kind in ("hit", "miss", "admit", "evict"):
+        cache.subscribe(
+            kind, lambda ev, k=kind: events.append((k, ev.cid, ev.tier)))
+    log = []
+    for i in range(n):
+        cid = i % 24
+        emb = space.content_embedding(cid % 6, cid).astype(np.float32)
+        r = cache.lookup(emb, cid=cid)
+        log.append((cid, r.hit, r.cid if r.hit else -1))
+        if not r.hit:
+            cache.admit(cid, emb, payload=[cid])
+    counters = {k: v for k, v in cache.metrics.snapshot().items()
+                if not k.endswith("_s")}
+    return cache, log, counters, events
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel", "sharded"])
+@pytest.mark.parametrize("hit_mode", ["content", "semantic"])
+def test_disabled_tiers_bit_identical_to_single_tier(backend, hit_mode):
+    """The guarantee the whole PR hangs on: host tier sized 0 and ghosts
+    disabled means the facade never constructs a TierManager and every
+    decision — hit/miss sequence, victims, event stream, counters — is
+    identical to the single-tier path, on every backend and hit mode."""
+    c0, l0, m0, e0 = _replay(backend, hit_mode, None)
+    c1, l1, m1, e1 = _replay(
+        backend, hit_mode, TierConfig(host_capacity=0, ghost_capacity=0))
+    assert c1.tiers is None and c1.tier_stats == {}
+    assert l0 == l1
+    assert m0 == m1
+    assert e0 == e1
+    assert sorted(c0.store.keys()) == sorted(c1.store.keys())
+
+
+def test_tiered_decisions_identical_across_backends():
+    """Tiering must not break backend equivalence: the same tiered replay
+    produces the same decision/event stream under numpy, kernel, and
+    sharded scoring."""
+    tiers = TierConfig(host_capacity=16, ghost_capacity=32)
+    ref = _replay("numpy", "semantic", tiers)
+    for backend in ("kernel", "sharded"):
+        got = _replay(backend, "semantic", tiers)
+        assert got[1] == ref[1]
+        assert got[2] == ref[2]
+        assert got[3] == ref[3]
+        assert got[0].tier_stats == ref[0].tier_stats
+
+
+# ------------------------------------------------------ checkpoint/restore
+@pytest.mark.parametrize("backend", ["numpy", "kernel", "sharded"])
+def test_checkpoint_restore_roundtrip_includes_tiers(backend):
+    """A restored snapshot carries the whole hierarchy: the same request
+    tail replays bit-identically (decisions, events, tier stats, host
+    membership) on every backend."""
+    space = EmbeddingSpace(dim=32, seed=31)
+    bkw = {"n_shards": 2} if backend == "sharded" else {}
+
+    def mk():
+        return SemanticCache(CacheConfig(
+            capacity=4, dim=32, tau_hit=0.85, backend=backend,
+            use_pallas=False, backend_kwargs=bkw, policy="RAC",
+            tiers=TierConfig(host_capacity=12, ghost_capacity=32)))
+
+    reqs = [(i % 20, space.content_embedding(i % 5, i % 20)
+             .astype(np.float32)) for i in range(70)]
+
+    def drive(cache, chunk):
+        out = []
+        for cid, emb in chunk:
+            r = cache.lookup(emb, cid=cid)
+            out.append((cid, r.hit, r.cid if r.hit else -1))
+            if not r.hit:
+                cache.admit(cid, emb, payload=[cid])
+        return out
+
+    cache = mk()
+    drive(cache, reqs[:40])
+    snap = cache.checkpoint()
+    host_at_snap = sorted(c for c in range(20) if cache.in_host(c))
+    stats_at_snap = cache.tier_stats
+    tail_a = drive(cache, reqs[40:])
+    stats_a, store_a = cache.tier_stats, sorted(cache.store.keys())
+
+    cache.restore(snap)
+    assert sorted(c for c in range(20) if cache.in_host(c)) == host_at_snap
+    assert cache.tier_stats == stats_at_snap
+    tail_b = drive(cache, reqs[40:])
+    assert tail_b == tail_a                  # bit-identical continuation
+    assert cache.tier_stats == stats_a
+    assert sorted(cache.store.keys()) == store_a
+
+
+def test_restore_accepts_pre_tiering_snapshots():
+    """Snapshots written before the tiers field existed must restore."""
+    cache = SemanticCache(CacheConfig(capacity=4, dim=8, policy="LRU"))
+    cache.admit(1, np.ones(8, np.float32), payload=["x"])
+    snap = cache.checkpoint()
+    del snap["tiers"]                        # simulate an old snapshot
+    cache.admit(2, np.full(8, 2, np.float32))
+    cache.restore(snap)
+    assert 1 in cache and 2 not in cache and cache.payloads == {1: ["x"]}
+
+
+# ---------------------------------------------------- decide_batch columns
+def test_decide_batch_reports_host_fallthrough_columns():
+    cache = _tiered()
+    _, embs = _space_embs()
+    for i in range(12):
+        cache.admit(i, embs[i], payload=[i])
+    demoted = [c for c in range(12) if cache.in_host(c)]
+    dec = cache.decide_batch(np.stack([embs[c] for c in demoted]))
+    assert dec.host_cid is not None and dec.host_sim is not None
+    np.testing.assert_array_equal(dec.host_cid, np.asarray(demoted))
+    assert (dec.host_sim > 0.99).all()       # exact embeddings
+    # the device columns still miss (those entries are not resident)
+    assert all(int(c) not in demoted for c in dec.hit_cid)
+    # untiered caches keep the legacy shape
+    plain = SemanticCache(CacheConfig(capacity=4, dim=32, policy="RAC"))
+    plain.admit(0, embs[0])
+    dec = plain.decide_batch(embs[0][None, :])
+    assert dec.host_cid is None and dec.host_sim is None
