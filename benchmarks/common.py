@@ -22,6 +22,17 @@ TRACE_LEN = int(os.environ.get("BENCH_TRACE_LEN", "10000"))
 # one-pass multi-policy arena (decisions are bit-identical to the
 # sequential replays); BENCH_ARENA=0 restores the per-policy loop
 USE_ARENA = os.environ.get("BENCH_ARENA", "1") != "0"
+# telemetry sink spec for bench runs ("memory", "jsonl:<path>", ...);
+# settable via the env or ``run.py --tracker``.  Empty = telemetry off.
+TRACKER_SPEC = os.environ.get("BENCH_TRACKER", "")
+
+
+def bench_tracker():
+    """Build the suite-wide tracker from ``TRACKER_SPEC`` (None when
+    telemetry is off) — benchmarks attach it to caches/engines so a
+    whole run's metrics land in one sink."""
+    from repro.telemetry import make_tracker
+    return make_tracker(TRACKER_SPEC or None)
 
 PAPER_BASELINES = ["FIFO", "LRU", "CLOCK", "TTL", "TinyLFU", "ARC",
                    "S3-FIFO", "SIEVE", "2Q", "LHD", "LeCaR"]
@@ -86,9 +97,20 @@ def emit(name: str, wall_us: float, derived: str):
 
 
 def save_json(fname: str, obj):
+    """Write ``OUT_DIR/fname`` plus a timestamped copy under
+    ``OUT_DIR/history/`` so successive runs (and CI artifacts) keep every
+    result instead of overwriting the last one."""
     os.makedirs(OUT_DIR, exist_ok=True)
+    payload = json.dumps(obj, indent=1)
     with open(os.path.join(OUT_DIR, fname), "w") as f:
-        json.dump(obj, f, indent=1)
+        f.write(payload)
+    hist = os.path.join(OUT_DIR, "history")
+    os.makedirs(hist, exist_ok=True)
+    stamp = time.strftime("%Y%m%dT%H%M%S")
+    stem, ext = os.path.splitext(fname)
+    with open(os.path.join(hist, f"{stem}-{stamp}{ext or '.json'}"),
+              "w") as f:
+        f.write(payload)
 
 
 class Timer:

@@ -6,18 +6,20 @@ Prints ``name,us_per_call,derived`` CSV rows.  Full result tables land in
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig2 fig4  # subset
     PYTHONPATH=src python -m benchmarks.run --list     # registered names
+    PYTHONPATH=src python -m benchmarks.run --tracker jsonl:bench_results/run.jsonl serving_async
 Env knobs: BENCH_SEEDS (default 3), BENCH_TRACE_LEN (default 10000),
-BENCH_ARENA (default 1: fig sweeps run the one-pass multi-policy arena).
+BENCH_ARENA (default 1: fig sweeps run the one-pass multi-policy arena),
+BENCH_TRACKER (telemetry sink spec; ``--tracker`` overrides it).
 """
 from __future__ import annotations
 
 import sys
 
-from . import (cache_api_bench, decision_path_bench, faithfulness,
+from . import (cache_api_bench, common, decision_path_bench, faithfulness,
                fig1_example, fig2_stress, fig3_real, fig4_ablation,
                fig5_sensitivity, kernel_bench, overhead, policy_arena_bench,
                roofline, serving_async_bench, sharded_lookup_bench,
-               tiered_cache_bench)
+               telemetry_overhead_bench, tiered_cache_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -35,11 +37,28 @@ SUITES = {
     "decision": lambda: decision_path_bench.main([]),  # fused vs per-request
     "arena": lambda: policy_arena_bench.main([]),  # multi-policy one-pass
     "tiered": lambda: tiered_cache_bench.main([]),  # device/host/ghost tiers
+    "telemetry": lambda: telemetry_overhead_bench.main([]),  # tracker overhead
 }
 
 
 def main() -> None:
     argv = sys.argv[1:]
+    # --tracker <spec> / --tracker=<spec>: suite-wide telemetry sink
+    # (threaded through benchmarks.common.bench_tracker())
+    while True:
+        hit = next((i for i, a in enumerate(argv)
+                    if a == "--tracker" or a.startswith("--tracker=")), None)
+        if hit is None:
+            break
+        if argv[hit] == "--tracker":
+            if hit + 1 >= len(argv):
+                raise SystemExit("--tracker needs a spec "
+                                 "(e.g. jsonl:bench_results/run.jsonl)")
+            common.TRACKER_SPEC = argv[hit + 1]
+            del argv[hit:hit + 2]
+        else:
+            common.TRACKER_SPEC = argv[hit].split("=", 1)[1]
+            del argv[hit]
     if "--list" in argv:
         for name in SUITES:
             print(name)

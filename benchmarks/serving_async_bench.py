@@ -29,8 +29,9 @@ from repro.configs import get_config
 from repro.core import SynthConfig, synthetic_trace
 from repro.models import smoke_variant
 from repro.serving import EngineConfig, ServingEngine
+from repro.telemetry import CompositeTracker, InMemoryTracker
 
-from .common import emit, save_json
+from .common import OUT_DIR, bench_tracker, emit, save_json
 
 
 def _requests(n: int, vocab: int, seed: int = 7):
@@ -43,9 +44,17 @@ def _requests(n: int, vocab: int, seed: int = 7):
 def run_once(async_admit: bool, n_requests: int, capacity: int,
              max_batch: int) -> dict:
     mcfg = smoke_variant(get_config("paper"))
+    # per-mode in-memory tracker: admission-stall percentiles, the
+    # hit-ratio-over-time series, and the request-path trace all come out
+    # of this one sink (composed with the suite-wide --tracker sink, if
+    # any).  Telemetry is observation-only — the output-parity assert in
+    # main() holds with it attached.
+    trk = InMemoryTracker()
+    extra = bench_tracker()
     eng = ServingEngine(mcfg, EngineConfig(
         cache_capacity=capacity, max_new_tokens=8, max_batch=max_batch,
-        max_seq=96, async_admit=async_admit))
+        max_seq=96, async_admit=async_admit,
+        tracker=trk if extra is None else CompositeTracker([trk, extra])))
     # pre-fill to capacity: every admission during the run evicts
     rng = np.random.default_rng(3)
     warm = rng.standard_normal((capacity, eng.cfg.emb_dim)).astype(np.float32)
@@ -72,8 +81,22 @@ def run_once(async_admit: bool, n_requests: int, capacity: int,
            "slot_stall_s": slot_stall, "flush_s": flush_s,
            "slot_stall_per_batch_us": 1e6 * slot_stall / batches,
            "hits": s["hits"], "evictions": s["evictions"]}
+    # the SLO surface: admission-stall distribution + hit ratio over
+    # logical time (windowed means of the per-lookup hit indicator)
+    pct = trk.percentiles("cache.admit_stall_s") or {}
+    row["admit_stall_p50_us"] = 1e6 * pct.get("p50", 0.0)
+    row["admit_stall_p99_us"] = 1e6 * pct.get("p99", 0.0)
+    row["hit_ratio_series"] = [
+        {"t": p["t"], "hit_ratio": p["mean"], "lookups": p["count"]}
+        for p in trk.series("cache.hit")]
     outputs = [(r.rid, r.cached, tuple(r.out_tokens)) for r in done]
     eng.close()
+    if async_admit:
+        # request-path spans (arrive→hit / queue→generate→complete) as a
+        # chrome://tracing -loadable trace for the async run
+        import os
+        os.makedirs(OUT_DIR, exist_ok=True)
+        trk.export_chrome(os.path.join(OUT_DIR, "serving_async_trace.json"))
     return row, outputs
 
 
@@ -95,7 +118,9 @@ def main(argv=None):
         emit(f"serving_admit/{row['mode']}",
              row["slot_stall_per_batch_us"],
              f"slot_stall={row['slot_stall_s'] * 1e3:.2f}ms,"
-             f"flush={row['flush_s'] * 1e3:.2f}ms,hits={row['hits']}")
+             f"flush={row['flush_s'] * 1e3:.2f}ms,hits={row['hits']},"
+             f"stall_p50={row['admit_stall_p50_us']:.1f}us,"
+             f"stall_p99={row['admit_stall_p99_us']:.1f}us")
     assert out_by_mode["blocking"] == out_by_mode["async"], \
         "async admission changed request outputs"
     stall = {r["mode"]: r["slot_stall_s"] for r in rows}

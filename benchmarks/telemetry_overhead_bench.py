@@ -1,0 +1,105 @@
+"""Telemetry hot-path overhead: no tracker vs NoopTracker vs InMemoryTracker.
+
+The telemetry contract is that observation is (a) decision-free and (b)
+cheap enough to leave on: with ``tracker=None`` the facade adds zero work,
+and with a :class:`~repro.telemetry.NoopTracker` the only cost is a couple
+of no-op method calls per operation.  This benchmark replays one fixed
+synthetic workload (semantic lookups + admissions at capacity, so every
+admission runs a victim scan) under each sink and reports the wall-clock
+ratio against the tracker-less run.
+
+Timing is min-of-repeats with the variants interleaved round-robin, so a
+background hiccup hits all variants alike instead of biasing one.  The
+run *asserts* the NoopTracker overhead bound (default 5%, env
+``BENCH_TELEMETRY_MAX_OVERHEAD``) — CI smoke runs this as a regression
+gate on the hot path.  Decision parity across sinks is asserted too.
+
+    PYTHONPATH=src python -m benchmarks.telemetry_overhead_bench
+    PYTHONPATH=src python -m benchmarks.telemetry_overhead_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from repro.cache import CacheConfig, SemanticCache
+from repro.core import SynthConfig, synthetic_trace
+from repro.telemetry import InMemoryTracker, NoopTracker
+
+from .common import emit, save_json
+
+MAX_OVERHEAD = float(os.environ.get("BENCH_TELEMETRY_MAX_OVERHEAD", "0.05"))
+
+
+def _replay(tracker, trace, capacity: int, dim: int):
+    """One full pass; returns (wall_s, decision fingerprint)."""
+    cache = SemanticCache(CacheConfig(
+        capacity=capacity, dim=dim, tau_hit=0.85, hit_mode="semantic",
+        backend="numpy", tracker=tracker))
+    decisions = []
+    t0 = time.perf_counter()
+    for r in trace.requests:
+        res = cache.lookup(r.emb, cid=r.cid)
+        if not res.hit:
+            cache.admit(r.cid, r.emb, payload=(r.cid,))
+        decisions.append(res.hit)
+    wall = time.perf_counter() - t0
+    fp = (tuple(decisions), cache.metrics.hits, cache.metrics.evictions)
+    cache.close()
+    return wall, fp
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+    n = 1200 if args.smoke else 6000
+    capacity = 128 if args.smoke else 512
+    repeats = args.repeats or (5 if args.smoke else 7)
+    dim = 32
+    trace = synthetic_trace(SynthConfig(trace_len=n, n_topics=16, seed=11,
+                                        dim=dim))
+
+    variants = {
+        "none": lambda: None,
+        "noop": NoopTracker,
+        "memory": InMemoryTracker,
+    }
+    best = {k: float("inf") for k in variants}
+    fps = {}
+    for make in variants.values():               # warm imports / allocators
+        _replay(make(), trace, capacity, dim)
+    for _ in range(repeats):
+        for name, make in variants.items():      # interleaved: shared drift
+            wall, fp = _replay(make(), trace, capacity, dim)
+            best[name] = min(best[name], wall)
+            fps[name] = fp
+    assert fps["none"] == fps["noop"] == fps["memory"], \
+        "telemetry changed cache decisions"
+
+    base = best["none"]
+    rows = []
+    for name in variants:
+        ratio = best[name] / base - 1.0
+        rows.append({"tracker": name, "wall_s": best[name],
+                     "us_per_lookup": 1e6 * best[name] / n,
+                     "overhead_vs_none": ratio})
+        emit(f"telemetry_overhead/{name}", 1e6 * best[name] / n,
+             f"overhead={100 * ratio:+.2f}%")
+    noop_overhead = best["noop"] / base - 1.0
+    assert noop_overhead <= MAX_OVERHEAD, (
+        f"NoopTracker hot-path overhead {100 * noop_overhead:.2f}% exceeds "
+        f"the {100 * MAX_OVERHEAD:.0f}% budget")
+    save_json("telemetry_overhead_bench.json",
+              {"rows": rows, "max_overhead": MAX_OVERHEAD,
+               "noop_overhead": noop_overhead,
+               "requests": n, "capacity": capacity, "repeats": repeats})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,19 @@ device mirrors sync against, ``checkpoint()/restore()`` captures all three
 tiers, and with ``tiers=None`` (the default) every decision is
 bit-identical to the single-tier facade.
 
+The facade is *observable* (``CacheConfig.tracker``, see
+:mod:`repro.telemetry` and ``docs/observability.md``): attach any
+:class:`~repro.telemetry.Tracker` — or a spec string like ``"memory"``
+or ``"jsonl:run.jsonl"`` — and every layer emits into it through scoped
+``child()`` views: ``cache.*`` latency histograms and hit/occupancy
+series from the facade and admitter, ``tier.*`` flow counters,
+``backend.sync.*`` mirror-upload deltas (rows and bytes), and request
+spans in the serving engine's ``serve.*`` namespace.  Telemetry is
+strictly observation-only — decisions are bit-identical with any sink
+attached, ``tracker=None`` adds zero work, and
+``SemanticCache.metrics_snapshot()`` consolidates every counter surface
+into one dict whether or not a tracker is configured.
+
 Usage::
 
     import numpy as np

@@ -38,10 +38,17 @@ __all__ = ["AsyncAdmitter"]
 
 
 class AsyncAdmitter:
-    """FIFO admission queue with an optional background drain worker."""
+    """FIFO admission queue with an optional background drain worker.
 
-    def __init__(self, cache, background: bool = True):
+    ``tracker`` (a :class:`repro.telemetry.Tracker`, observation-only)
+    receives a ``cache.queue_depth`` gauge at every submit plus
+    ``cache.enqueue_s`` / ``cache.flush_s`` stall histograms — the
+    producer-visible admission-stall distributions behind the serving
+    SLO report."""
+
+    def __init__(self, cache, background: bool = True, tracker=None):
         self._cache = cache
+        self._trk = tracker
         self._cv = threading.Condition()
         self._pending: deque[tuple] = deque()
         self._evicted: list[int] = []       # victims since the last flush
@@ -71,8 +78,13 @@ class AsyncAdmitter:
             if self._closed:
                 raise RuntimeError("AsyncAdmitter is closed")
             self._pending.append((cid, emb, payload, t, req))
+            depth = len(self._pending) + self._inflight
             self._cv.notify_all()
-        self.enqueue_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.enqueue_s += dt
+        if self._trk is not None:
+            self._trk.observe("cache.enqueue_s", dt)
+            self._trk.gauge("cache.queue_depth", depth)
 
     def flush(self) -> list[int]:
         """Apply every queued admission; return victims since last flush.
@@ -90,7 +102,10 @@ class AsyncAdmitter:
             self._drain_inline()
             with self._cv:
                 out, self._evicted = self._evicted, []
-        self.flush_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.flush_s += dt
+        if self._trk is not None:
+            self._trk.observe("cache.flush_s", dt)
         if self._error is not None:
             err, self._error = self._error, None
             with self._cv:

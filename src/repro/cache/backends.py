@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core.policy_table import PolicyTable
 from repro.core.store import ResidentStore
+from repro.telemetry.tracing import annotate
 
 from .types import DecisionBatch
 
@@ -157,7 +158,9 @@ class _DeviceMirror:
         self.dtypes = dtypes
         self.version = None
         self.arrays: Optional[dict] = None
-        self.stats = {"full": 0, "incremental": 0, "rows": 0}
+        # "bytes" = host->device traffic this mirror moved (scattered rows
+        # for incremental syncs, whole arrays for full uploads)
+        self.stats = {"full": 0, "incremental": 0, "rows": 0, "bytes": 0}
 
     def sync(self, version: int, dirty_since, host_fn) -> dict:
         import jax.numpy as jnp
@@ -174,16 +177,21 @@ class _DeviceMirror:
                 rows = bucket_rows(np.fromiter(sorted(dirty),
                                                dtype=np.int64,
                                                count=len(dirty)))
-                self.arrays = {
-                    k: self.arrays[k].at[rows].set(
-                        np.asarray(v[rows], dtype=self.dtypes[k]))
-                    for k, v in host.items()}
+                out = {}
+                for k, v in host.items():
+                    block = np.asarray(v[rows], dtype=self.dtypes[k])
+                    out[k] = self.arrays[k].at[rows].set(block)
+                    self.stats["bytes"] += block.nbytes
+                self.arrays = out
                 self.stats["incremental"] += 1
                 self.stats["rows"] += len(dirty)
         else:
             self.arrays = {k: jnp.asarray(np.asarray(v, self.dtypes[k]))
                            for k, v in host.items()}
             self.stats["full"] += 1
+            self.stats["bytes"] += sum(
+                v.size * np.dtype(self.dtypes[k]).itemsize
+                for k, v in host.items())
         self.version = version
         return self.arrays
 
@@ -328,14 +336,35 @@ class KernelBackend:
                                             "tl": np.int32})
         # the arena's stacked (P*S, D) slab, synced against its flat journal
         self._arena_mirror = _DeviceMirror({"emb": np.float32})
+        self._tracker = None                # telemetry sink (observation-only)
+        self._sync_seen: dict[str, int] = {}   # last sync_stats flushed to it
+
+    def set_tracker(self, tracker) -> None:
+        """Attach a :class:`repro.telemetry.Tracker` child; the backend
+        emits ``sync.*`` counter deltas after each fused decision pass.
+        Strictly observation-only — decisions are unaffected."""
+        self._tracker = tracker
+
+    def _flush_sync(self) -> None:
+        """Emit the since-last-flush delta of ``sync_stats`` as counters."""
+        trk = self._tracker
+        if trk is None:
+            return
+        stats = self.sync_stats
+        for k, v in stats.items():
+            d = v - self._sync_seen.get(k, 0)
+            if d:
+                trk.count(f"sync.{k}", d)
+        self._sync_seen = stats
 
     @property
     def sync_stats(self) -> dict:
         """Aggregate mirror observability: full uploads vs dirty-row
-        scatters, and total rows scattered."""
-        mirrors = (self._store_mirror, self._slot_mirror, self._topic_mirror)
+        scatters, total rows scattered, and host→device bytes moved."""
+        mirrors = (self._store_mirror, self._slot_mirror,
+                   self._topic_mirror, self._arena_mirror)
         return {k: sum(m.stats[k] for m in mirrors)
-                for k in ("full", "incremental", "rows")}
+                for k in ("full", "incremental", "rows", "bytes")}
 
     def top1(self, store: ResidentStore, query: np.ndarray) -> tuple[int, float]:
         cids, sims = self.top1_batch(store, np.asarray(query)[None, :])
@@ -354,9 +383,10 @@ class KernelBackend:
         # runtime n_valid = the store's high-water mark: slots past it have
         # never been occupied, so the kernel skips scoring the free tail
         # (one compilation — the count is scalar-prefetched, not baked in)
-        vals, idx = ops.sim_top1(qp, store.emb, n_valid=store.hwm,
-                                 use_pallas=self.use_pallas,
-                                 interpret=self.interpret)
+        with annotate("rac/sim_top1"):
+            vals, idx = ops.sim_top1(qp, store.emb, n_valid=store.hwm,
+                                     use_pallas=self.use_pallas,
+                                     interpret=self.interpret)
         vals = np.asarray(vals[:b], dtype=np.float64)
         idx = np.asarray(idx[:b])
         cids = store.cid[idx].copy()
@@ -441,15 +471,17 @@ class KernelBackend:
         dev = self._arena_mirror.sync(
             arena.version, arena.dirty_since,
             lambda: {"emb": arena.emb.reshape(n_pol * n_slots, dim)})
-        vals, idx = ops.sim_top1_multi(
-            qp, dev["emb"].reshape(n_pol, n_slots, dim),
-            n_valid=arena.hwms(), use_pallas=self.use_pallas,
-            interpret=self.interpret)
+        with annotate("rac/sim_top1_multi"):
+            vals, idx = ops.sim_top1_multi(
+                qp, dev["emb"].reshape(n_pol, n_slots, dim),
+                n_valid=arena.hwms(), use_pallas=self.use_pallas,
+                interpret=self.interpret)
         vals = np.asarray(vals[:, :b], dtype=np.float64)
         idx = np.asarray(idx[:, :b])
         cids = arena.cid[np.arange(n_pol)[:, None], idx].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
         sims = np.where(cids >= 0, vals, -np.inf)
+        self._flush_sync()
         return cids, sims
 
     def rac_value_masked(self, tsi, tids, tp_last, t_last, alpha, t_now,
@@ -507,11 +539,12 @@ class KernelBackend:
         # routing Top-1 (runtime n_topics = topic hwm) + masked Eq.1 victim
         # values with a runtime t_now — nothing recompiles as fill level,
         # topic count, or simulation time advance
-        hv, hi, rv, ri, vv = ops.fused_decide(
-            qp, dev["emb"], store.hwm, dev["rep"], table.topic_hwm,
-            dev["tsi"], dev["tid"], dev["occ"], dev["tp"], dev["tl"],
-            t_now, alpha=float(alpha), use_pallas=self.use_pallas,
-            interpret=self.interpret)
+        with annotate("rac/fused_decide"):
+            hv, hi, rv, ri, vv = ops.fused_decide(
+                qp, dev["emb"], store.hwm, dev["rep"], table.topic_hwm,
+                dev["tsi"], dev["tid"], dev["occ"], dev["tp"], dev["tl"],
+                t_now, alpha=float(alpha), use_pallas=self.use_pallas,
+                interpret=self.interpret)
         hv = np.asarray(hv[:b], dtype=np.float64)
         cids = store.cid[np.asarray(hi[:b])].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
@@ -519,6 +552,7 @@ class KernelBackend:
         rv = np.asarray(rv[:b], dtype=np.float64)
         ri = np.where(np.isfinite(rv),
                       np.asarray(ri[:b], dtype=np.int64), -1)
+        self._flush_sync()
         return DecisionBatch(cids, sims, ri, rv,
                              np.asarray(vv, dtype=np.float64))
 

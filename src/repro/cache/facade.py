@@ -28,9 +28,21 @@ applies insert + eviction scoring off the request path, firing the same
 hooks and metrics as the synchronous path.  All mutable state is guarded
 by one reentrant lock so concurrent lookups never observe a half-applied
 admission.
+
+Telemetry: ``cfg.tracker`` attaches a :class:`repro.telemetry.Tracker`
+the facade emits through — lookup/admit latency histograms, windowed
+hit-ratio and occupancy series, tier-tagged eviction counters, and spans
+around ``decide_batch`` and the host-tier fall-through.  The device
+backends and the tier manager get scoped children of the same tracker
+(``backend.*`` / ``tier.*`` names).  Emission is strictly observation-
+only (decisions are bit-identical with any tracker — see
+``tests/test_telemetry.py``), ``metrics_snapshot()`` consolidates every
+counter surface into one dict, and event-subscriber failures are
+contained (counted as ``hook_errors``; ``cfg.debug_hooks`` re-raises).
 """
 from __future__ import annotations
 
+import contextlib
 import copy
 import threading
 import time
@@ -40,12 +52,15 @@ import numpy as np
 
 from repro.core.store import ResidentStore
 from repro.core.types import Request
+from repro.telemetry.tracker import make_tracker
 
 from .backends import LookupBackend, get_backend
 from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
                     CacheMiss, CacheResult, DecisionBatch)
 
 PolicyFactory = Callable[[int, ResidentStore], Any]
+
+_NULL_CM = contextlib.nullcontext()      # reusable no-op span
 
 _MUTABLE_STATE = ("store", "policy", "payloads", "clock", "metrics",
                   "tiers")
@@ -105,19 +120,28 @@ class SemanticCache:
         self._hooks: dict[str, list[Callable[[CacheEvent], None]]] = {}
         self._lock = threading.RLock()     # guards all mutable state
         self._wire_value_backend()
+        # telemetry: strictly observation-only — None skips emission
+        # entirely, and decisions are bit-identical with any tracker
+        self._trk = make_tracker(cfg.tracker)
+        if self._trk is not None and hasattr(self.backend, "set_tracker"):
+            self.backend.set_tracker(self._trk.child("backend"))
         # tiered hierarchy (host DRAM tier + ghost metadata) behind the
         # facade; None = single-tier, bit-identical to the pre-tiering path
         self.tiers = None
         if cfg.tiers is not None and (cfg.tiers.host_capacity > 0
                                       or cfg.tiers.ghost_capacity > 0):
             from .tiers import TierManager
-            self.tiers = TierManager(cfg.tiers, cfg.dim)
+            self.tiers = TierManager(
+                cfg.tiers, cfg.dim,
+                tracker=None if self._trk is None
+                else self._trk.child("tier"))
         # event-driven admission: enqueue + background/deterministic drain
         self.admitter = None
         if cfg.async_admit:
             from .async_admit import AsyncAdmitter
             self.admitter = AsyncAdmitter(
-                self, background=cfg.async_admit != "sync")
+                self, background=cfg.async_admit != "sync",
+                tracker=self._trk)
 
     def _wire_value_backend(self):
         for attr, method in _VALUE_HOOKS:
@@ -133,11 +157,23 @@ class SemanticCache:
     def _emit(self, kind: str, cid: int, t: int, sim: float = float("nan"),
               payload: Any = None, tier: str = "device"):
         hooks = self._hooks.get(kind)
-        if hooks:
-            ev = CacheEvent(kind=kind, cid=cid, t=t, sim=sim,
-                            payload=payload, tier=tier)
-            for fn in hooks:
+        if not hooks:
+            return
+        ev = CacheEvent(kind=kind, cid=cid, t=t, sim=sim,
+                        payload=payload, tier=tier)
+        for fn in hooks:
+            try:
                 fn(ev)
+            except Exception:
+                # a subscriber must never corrupt the cache operation it
+                # observes: count the failure and keep going (the
+                # development mode re-raises at the call site)
+                self.metrics.hook_errors += 1
+                if self._trk is not None:
+                    self._trk.count("cache.hook_errors",
+                                    tags={"kind": kind})
+                if self.cfg.debug_hooks:
+                    raise
 
     # ------------------------------------------------------------ basics
     def __len__(self) -> int:
@@ -155,6 +191,36 @@ class SemanticCache:
     def tier_stats(self) -> dict:
         """Per-tier counters (empty when running single-tier)."""
         return {} if self.tiers is None else self.tiers.stats.snapshot()
+
+    @property
+    def tracker(self):
+        """The attached :class:`repro.telemetry.Tracker` (or None)."""
+        return self._trk
+
+    def metrics_snapshot(self) -> dict:
+        """The consolidated observability surface: ONE dict merging the
+        :class:`CacheMetrics` counters, the per-tier flow counters
+        (``tiers``, when tiered), the device backend's mirror-sync stats
+        (``sync``, when the backend keeps device mirrors), and the
+        admission-queue state (``pending_admits`` + the producer-visible
+        ``admit_stall_s``, split into ``enqueue_s``/``flush_s`` under
+        async admission).  Consumers (the serving engine's ``stats``,
+        benchmarks, reports) read this instead of hand-merging the four
+        historical surfaces."""
+        with self._lock:
+            snap = self.metrics.snapshot()
+            snap["pending_admits"] = self.pending_admits
+            snap["admit_stall_s"] = self.admit_stall_s
+            if self.admitter is not None:
+                snap["enqueue_s"] = self.admitter.enqueue_s
+                snap["flush_s"] = self.admitter.flush_s
+            tiers = self.tier_stats
+            if tiers:
+                snap["tiers"] = tiers
+            sync = getattr(self.backend, "sync_stats", None)
+            if sync:
+                snap["sync"] = dict(sync)
+            return snap
 
     def _tick(self, t: Optional[int]) -> int:
         if t is None:
@@ -211,7 +277,14 @@ class SemanticCache:
                     result = CacheMiss(
                         best_cid=best_cid if np.isfinite(best_sim)
                         else -1, best_sim=best_sim, t=t)
-            self.metrics.lookup_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.metrics.lookup_s += dt
+            trk = self._trk
+            if trk is not None:
+                trk.observe("cache.lookup_s", dt)
+                # windowed hit indicator over logical time -> the
+                # hit-ratio-over-time series every workload study wants
+                trk.observe("cache.hit", 1.0 if result.hit else 0.0, t)
         return result
 
     def _tier_lookup(self, emb: np.ndarray, cid: int,
@@ -225,9 +298,11 @@ class SemanticCache:
         configured, so the request path never blocks on device eviction
         scoring.  Ghost metadata rides along via ``revive_ghost`` so the
         policy's arrival path restores the preserved relation evidence."""
-        served = self.tiers.serve(np.asarray(emb, dtype=np.float32),
-                                  cid=cid, hit_mode=self.cfg.hit_mode,
-                                  tau_hit=self.cfg.tau_hit, t=t)
+        with (self._trk.span("cache.tier_serve")
+              if self._trk is not None else _NULL_CM):
+            served = self.tiers.serve(np.asarray(emb, dtype=np.float32),
+                                      cid=cid, hit_mode=self.cfg.hit_mode,
+                                      tau_hit=self.cfg.tau_hit, t=t)
         if not served:
             return None
         revive = getattr(self.policy, "revive_ghost", None)
@@ -261,7 +336,9 @@ class SemanticCache:
         interchangeably.  With a table-less policy (baselines) the routing
         and victim columns degrade to sentinels."""
         embs = np.asarray(embs, dtype=np.float32)
-        with self._lock:
+        with (self._trk.span("cache.decide_batch",
+                             tags={"b": int(embs.shape[0])})
+              if self._trk is not None else _NULL_CM), self._lock:
             t_now = self.clock if t is None else t
             table = getattr(self.policy, "table", None)
             alpha = float(getattr(self.policy, "alpha", 0.0))
@@ -338,6 +415,8 @@ class SemanticCache:
         assigned now, so ordering is deterministic) and the returned list
         is empty — evictions surface through the ``"evict"`` hook and
         :meth:`flush`."""
+        trk = self._trk
+        t0 = time.perf_counter() if trk is not None else 0.0
         if self.admitter is not None:
             # tick + enqueue under one lock: concurrent producers must not
             # queue out of timestamp order, or the FIFO drain would apply
@@ -345,8 +424,16 @@ class SemanticCache:
             with self._lock:
                 t = self._tick(t)
                 self.admitter.submit(cid, emb, payload, t, req)
+            if trk is not None:
+                trk.observe("cache.admit_stall_s",
+                            time.perf_counter() - t0)
             return []
-        return self._admit_now(cid, emb, payload, t, req)
+        out = self._admit_now(cid, emb, payload, t, req)
+        if trk is not None:
+            # producer-visible stall: in synchronous mode the full
+            # insert+evict cost, in async mode just the enqueue above
+            trk.observe("cache.admit_stall_s", time.perf_counter() - t0)
+        return out
 
     def _admit_now(self, cid: int, emb: np.ndarray, payload: Any,
                    t: Optional[int], req: Optional[Request]) -> list[int]:
@@ -375,6 +462,7 @@ class SemanticCache:
             self.policy.on_admit(cid, self._request(cid, emb, t, req), t)
             self.metrics.admissions += 1
             self._emit("admit", cid, t, payload=payload)
+            trk = self._trk
             while len(self.store) > self.cfg.capacity:
                 victim = self.policy.victim(t)
                 vemb = (self.store.emb[self.store.slot_of[victim]].copy()
@@ -383,17 +471,22 @@ class SemanticCache:
                 vp = self.payloads.pop(victim, None)
                 self.metrics.evictions += 1
                 evicted.append(victim)
+                etier = "device"
                 if self.tiers is not None:
                     # demote instead of dropping: the host tier keeps the
                     # payload (and the ghost tier the relation metadata)
                     meta_fn = getattr(self.policy, "ghost_meta", None)
                     meta = meta_fn(victim) if meta_fn is not None else None
-                    demoted = self.tiers.demote(victim, vemb, vp, t, meta)
-                    self._emit("evict", victim, t, payload=vp,
-                               tier="host" if demoted else "device")
-                else:
-                    self._emit("evict", victim, t, payload=vp)
-            self.metrics.admit_s += time.perf_counter() - t0
+                    if self.tiers.demote(victim, vemb, vp, t, meta):
+                        etier = "host"
+                self._emit("evict", victim, t, payload=vp, tier=etier)
+                if trk is not None:
+                    trk.count("cache.evictions", tags={"tier": etier})
+            dt = time.perf_counter() - t0
+            self.metrics.admit_s += dt
+            if trk is not None:
+                trk.observe("cache.admit_s", dt)
+                trk.observe("cache.occupancy", float(len(self.store)), t)
         return evicted
 
     # ------------------------------------------------- async admission

@@ -38,6 +38,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.store import ResidentStore
+from repro.telemetry.tracing import annotate
 
 from .types import DecisionBatch
 
@@ -120,8 +121,29 @@ class ShardedKernelBackend:
         self._slab_cache: dict[int, tuple] = {}    # store.version -> (slab, nv)
         self._scatter_fn = None                    # dirty-row device update
         # observability for the incremental path: full uploads vs dirty-row
-        # scatters, and how many rows the scatters moved in total
-        self.sync_stats = {"full": 0, "incremental": 0, "rows": 0}
+        # scatters, how many rows the scatters moved in total, and the
+        # host→device bytes those transfers shipped
+        self.sync_stats = {"full": 0, "incremental": 0, "rows": 0,
+                           "bytes": 0}
+        self._tracker = None                # telemetry sink (observation-only)
+        self._sync_seen: dict[str, int] = {}   # last sync_stats flushed to it
+
+    def set_tracker(self, tracker) -> None:
+        """Attach a :class:`repro.telemetry.Tracker` child; the backend
+        emits ``sync.*`` counter deltas after each fused decision pass.
+        Strictly observation-only — decisions are unaffected."""
+        self._tracker = tracker
+
+    def _flush_sync(self) -> None:
+        """Emit the since-last-flush delta of ``sync_stats`` as counters."""
+        trk = self._tracker
+        if trk is None:
+            return
+        for k, v in self.sync_stats.items():
+            d = v - self._sync_seen.get(k, 0)
+            if d:
+                trk.count(f"sync.{k}", d)
+        self._sync_seen = dict(self.sync_stats)
 
     # ------------------------------------------------------------- topology
     @property
@@ -182,6 +204,7 @@ class ShardedKernelBackend:
         slab = self._incremental_slab(store, spec)
         if slab is None:
             self.sync_stats["full"] += 1
+            self.sync_stats["bytes"] += store.emb.nbytes
             slab = jax.device_put(np.ascontiguousarray(store.shard_view()),
                                   spec)
         if len(self._slab_cache) >= 4:              # keep a few snapshots
@@ -211,6 +234,8 @@ class ShardedKernelBackend:
             self._scatter_fn = self._build_scatter()
         self.sync_stats["incremental"] += 1
         self.sync_stats["rows"] += len(dirty)
+        self.sync_stats["bytes"] += (slots.size * store.emb.shape[1]
+                                     * store.emb.itemsize)
         return self._scatter_fn(slab,
                                 (slots // store.rows_per_shard).astype(np.int32),
                                 (slots % store.rows_per_shard).astype(np.int32),
@@ -260,7 +285,8 @@ class ShardedKernelBackend:
         if self.mesh() is not None:
             if self._lookup_fn is None:
                 self._lookup_fn = self._build_lookup()
-            vals, shard, local = self._lookup_fn(qp, slab, nv)
+            with annotate("rac/sharded_top1"):
+                vals, shard, local = self._lookup_fn(qp, slab, nv)
             vals = np.asarray(vals[:b], dtype=np.float64)
             gslot = (np.asarray(shard[:b], dtype=np.int64) * rows
                      + np.asarray(local[:b], dtype=np.int64))
@@ -321,6 +347,8 @@ class ShardedKernelBackend:
                                         count=len(dirty))
                     self.sync_stats["incremental"] += 1
                     self.sync_stats["rows"] += len(dirty)
+                    self.sync_stats["bytes"] += (len(dirty) * dim
+                                                 * arena.emb.itemsize)
                     if self.mesh() is not None:
                         flat = bucket_rows(flat)
                         ps = flat // n_slots
@@ -350,6 +378,7 @@ class ShardedKernelBackend:
         slab = _np.ascontiguousarray(
             emb.reshape(n_pol, s, rows, dim).transpose(1, 0, 2, 3))
         self.sync_stats["full"] += 1
+        self.sync_stats["bytes"] += slab.nbytes
         if self.mesh() is not None:
             import jax
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -426,7 +455,8 @@ class ShardedKernelBackend:
             dnv = jax.device_put(lnv, spec)
             if self._multi_fn is None:
                 self._multi_fn = self._build_multi_lookup()
-            vals, win, local = self._multi_fn(qp, shard_slab, dnv)
+            with annotate("rac/sharded_top1_multi"):
+                vals, win, local = self._multi_fn(qp, shard_slab, dnv)
             vals = _np.asarray(vals[:, :b], dtype=_np.float64)
             gslot = (_np.asarray(win[:, :b], dtype=_np.int64) * rows
                      + _np.asarray(local[:, :b], dtype=_np.int64))
@@ -455,6 +485,7 @@ class ShardedKernelBackend:
         cids = _np.where(gslot < n_slots,
                          arena.cid[_np.arange(n_pol)[:, None], safe], -1)
         sims = _np.where(cids >= 0, vals, -_np.inf)
+        self._flush_sync()
         return cids, sims
 
     def top1_rows(self, store: ShardedStore, queries: np.ndarray,
@@ -594,11 +625,12 @@ class ShardedKernelBackend:
             if fn is None:
                 fn = self._decide_fns[float(alpha)] = \
                     self._build_decide(float(alpha))
-            hv, shard, local, rv, ri, vv = fn(
-                qp, slab, nv, table.rep, np.asarray([table.topic_hwm],
-                                                    dtype=np.int32),
-                tsi, tid, occ, tp, tl,
-                np.asarray([t_now], dtype=np.int32))
+            with annotate("rac/sharded_fused_decide"):
+                hv, shard, local, rv, ri, vv = fn(
+                    qp, slab, nv, table.rep, np.asarray([table.topic_hwm],
+                                                        dtype=np.int32),
+                    tsi, tid, occ, tp, tl,
+                    np.asarray([t_now], dtype=np.int32))
             hv = np.asarray(hv[:b], dtype=np.float64)
             gslot = (np.asarray(shard[:b], dtype=np.int64) * rows
                      + np.asarray(local[:b], dtype=np.int64))
@@ -619,9 +651,11 @@ class ShardedKernelBackend:
             rv = np.asarray(rv_[:b], dtype=np.float64)
             ri = np.where(np.isfinite(rv),
                           np.asarray(ri_[:b], dtype=np.int64), -1)
+            self._flush_sync()
             return DecisionBatch(hit_cid, hit_sim, ri, rv, vv)
         cids = store.cid[gslot].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
         sims = np.where(cids >= 0, hv, -np.inf)
         ri = np.where(np.isfinite(rv), ri, -1)
+        self._flush_sync()
         return DecisionBatch(cids, sims, ri, rv, vv)

@@ -244,11 +244,20 @@ class TierManager:
     it at three points (all under the facade's lock): device eviction
     (:meth:`demote`), device miss (:meth:`serve`), and admission
     (:meth:`on_admit`).  It never calls back into the facade, so the
-    checkpoint deep copy needs no cooperation."""
+    checkpoint deep copy needs no cooperation.
 
-    def __init__(self, cfg: TierConfig, dim: int):
+    ``tracker`` (a scoped :class:`repro.telemetry.Tracker` child, or
+    None) receives the same flow counters :class:`TierStats` accumulates
+    — demotions, promotions, host hits/evictions, ghost churn — plus a
+    windowed promotion-rate series, so the per-tier flow shows up in the
+    unified metric registry alongside the cache-level series.  Trackers
+    deep-copy as shared references, so checkpointing a tiered cache never
+    clones the sink."""
+
+    def __init__(self, cfg: TierConfig, dim: int, tracker=None):
         self.cfg = cfg
         self.dim = dim
+        self._trk = tracker
         self.host = (HostTier(cfg.host_capacity, dim)
                      if cfg.host_capacity > 0 else None)
         # ARC-style split: b1 = demoted, never promoted; b2 = promoted at
@@ -262,6 +271,12 @@ class TierManager:
         self.promoted = GhostTier(cap)
         self.stats = TierStats()
 
+    def _count(self, name: str, n: int = 1):
+        # tolerate pre-telemetry snapshots restored into this process
+        trk = getattr(self, "_trk", None)
+        if trk is not None and n:
+            trk.count(name, n)
+
     # ------------------------------------------------------------- ghosts
     def _ghost_insert(self, cid: int, meta: Optional[dict]):
         if self.cfg.ghost_capacity <= 0:
@@ -273,6 +288,8 @@ class TierManager:
         dropped = lst.put(cid, meta)
         self.stats.ghost_inserts += 1
         self.stats.ghost_drops += len(dropped)
+        self._count("ghost_inserts")
+        self._count("ghost_drops", len(dropped))
 
     def ghost_get(self, cid: int) -> Optional[dict]:
         """Peek (no removal) at a cid's ghost record, B2 before B1."""
@@ -289,8 +306,10 @@ class TierManager:
             self._ghost_insert(cid, meta)
             return False
         self.stats.demotions += 1
+        self._count("demotions")
         for old, old_meta in self.host.put(cid, emb, payload, t, meta):
             self.stats.host_evictions += 1
+            self._count("host_evictions")
             self._ghost_insert(old, old_meta)
         return True
 
@@ -310,6 +329,7 @@ class TierManager:
         if self.host is None or len(self.host) == 0:
             return []
         self.stats.host_lookups += 1
+        self._count("host_lookups")
         if hit_mode == "content":
             if cid not in self.host:
                 return []
@@ -320,6 +340,7 @@ class TierManager:
                 self.promoted.put(cid, True)
             self.stats.host_hits += 1
             self.stats.promotions += 1
+            self._record_promotions(1, t)
             return [(cid, float("nan"), hemb, payload, meta)]
         k = max(1, int(self.cfg.promote_k))
         cids, sims = self.host.topk(emb, k)
@@ -336,7 +357,17 @@ class TierManager:
         if out:
             self.stats.host_hits += 1
             self.stats.promotions += len(out)
+            self._record_promotions(len(out), t)
         return out
+
+    def _record_promotions(self, n: int, t: int):
+        trk = getattr(self, "_trk", None)
+        if trk is None:
+            return
+        trk.count("host_hits")
+        trk.count("promotions", n)
+        # windowed promotion rate over logical time
+        trk.observe("promotion", float(n), t)
 
     # ------------------------------------------------------------ admission
     def on_admit(self, cid: int, policy, emb: np.ndarray):
@@ -348,12 +379,14 @@ class TierManager:
         counters — and the demoted topic re-enters hot."""
         if self.host is not None and self.host.drop(cid):
             self.stats.host_invalidations += 1
+            self._count("host_invalidations")
         meta = self.ghost_b2.pop(cid, None)
         if meta is None:
             meta = self.ghost_b1.pop(cid, None)
         if meta is None:
             return
         self.stats.ghost_revivals += 1
+        self._count("ghost_revivals")
         revive = getattr(policy, "revive_ghost", None)
         if revive is not None:
             revive(cid, meta, rep=emb)

@@ -56,6 +56,19 @@ class CacheConfig:
     batch boundaries; ``"sync"`` queues without a worker — the queue only
     drains inside ``flush()``/``drain()``, the deterministic replay-parity
     mode.  After a flush all three produce identical state.
+
+    ``tracker`` attaches a :class:`repro.telemetry.Tracker` (instance or
+    spec string like ``"memory"`` / ``"jsonl:<path>"``) that the facade,
+    the admitter, the tier manager, and the device backends emit
+    latencies, counters, windowed series, and spans through — strictly
+    observation-only: decisions are bit-identical with any tracker, and
+    ``None`` (the default) skips emission entirely.
+
+    ``debug_hooks`` controls event-subscriber failure handling: by
+    default a raising hook is caught mid-operation and counted
+    (``CacheMetrics.hook_errors`` + the ``cache.hook_errors`` tracker
+    counter); with ``debug_hooks=True`` the exception propagates to the
+    ``lookup``/``admit`` caller (the development mode).
     """
 
     capacity: int
@@ -69,6 +82,8 @@ class CacheConfig:
     backend_kwargs: dict = dataclasses.field(default_factory=dict)
     async_admit: bool | str = False      # False | True (worker) | "sync"
     tiers: Optional[TierConfig] = None   # None = single-tier (bit-exact)
+    tracker: Any = None                  # Tracker | spec str | None (off)
+    debug_hooks: bool = False            # re-raise subscriber-hook errors
 
 
 @dataclasses.dataclass
@@ -161,6 +176,7 @@ class CacheMetrics:
     lookups: int = 0
     lookup_s: float = 0.0
     admit_s: float = 0.0
+    hook_errors: int = 0                 # subscriber hooks that raised
 
     @property
     def requests(self) -> int:
@@ -176,4 +192,5 @@ class CacheMetrics:
             "admissions": self.admissions, "evictions": self.evictions,
             "lookups": self.lookups, "hit_ratio": self.hit_ratio,
             "lookup_s": self.lookup_s, "admit_s": self.admit_s,
+            "hook_errors": self.hook_errors,
         }

@@ -41,6 +41,7 @@ import numpy as np
 from repro.cache import CacheConfig, SemanticCache, TierConfig
 from repro.models import Model, build_model, make_decode_step
 from repro.models.config import ModelConfig
+from repro.telemetry.tracker import make_tracker
 
 
 @dataclasses.dataclass
@@ -60,6 +61,12 @@ class EngineConfig:
                                   # hits promote back via the admit path
     ghost_capacity: int = 0       # metadata-only ghost tier entries (0 =
                                   # policy-internal ghosts only)
+    tracker: object = None        # telemetry sink: a repro.telemetry.Tracker
+                                  # instance or spec string ("memory",
+                                  # "jsonl:<path>", "a+b"); shared with the
+                                  # cache so request-path spans and cache
+                                  # latencies land in ONE trace/registry.
+                                  # None (default) disables emission.
 
 
 @dataclasses.dataclass
@@ -72,6 +79,8 @@ class RequestState:
     done: bool = False
     cached: bool = False
     t_submit: float = 0.0
+    t_sched: float = 0.0          # scheduled into a generation slot
+    t_first: float = 0.0          # first output token (TTFT proxy anchor)
     t_done: float = 0.0
 
 
@@ -83,6 +92,9 @@ class ServingEngine:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.params = params if params is not None else self.model.init(rng)
         self.decode = jax.jit(make_decode_step(self.model))
+        # one tracker instance shared with the cache: engine request-path
+        # spans and cache.* latencies land in the same registry/trace
+        self._trk = make_tracker(ecfg.tracker)
         # semantic cache (RAC-managed) behind the unified facade
         self.cache = SemanticCache(CacheConfig(
             capacity=ecfg.cache_capacity, dim=ecfg.emb_dim,
@@ -93,7 +105,8 @@ class ServingEngine:
             tiers=(TierConfig(host_capacity=ecfg.host_capacity,
                               ghost_capacity=ecfg.ghost_capacity)
                    if ecfg.host_capacity > 0 or ecfg.ghost_capacity > 0
-                   else None)))
+                   else None),
+            tracker=self._trk))
         self._gen = {"generated_tokens": 0, "batches": 0,
                      "evicted_responses": 0}
         self.cache.subscribe("evict", self._on_evict)
@@ -126,11 +139,51 @@ class ServingEngine:
         return self.cache.payloads
 
     @property
+    def tracker(self):
+        """The engine's telemetry sink (None when telemetry is off)."""
+        return self._trk
+
+    @property
     def stats(self) -> dict:
-        m = self.cache.metrics
-        return {**self._gen, "hits": m.hits, "misses": m.misses,
-                "evictions": m.evictions,
-                "admit_stall_s": self.cache.admit_stall_s}
+        """Serving counters on top of the cache's consolidated metrics
+        surface (:meth:`SemanticCache.metrics_snapshot`) — one merge
+        point instead of hand-picking attributes per layer.  With a
+        tracker attached, the admission-stall distribution's p50/p99
+        ride along (the serving SLO summary)."""
+        snap = self.cache.metrics_snapshot()
+        out = {**self._gen, "hits": snap["hits"], "misses": snap["misses"],
+               "evictions": snap["evictions"],
+               "hit_ratio": snap["hit_ratio"],
+               "admit_stall_s": snap["admit_stall_s"]}
+        if self._trk is not None:
+            pct = self._trk.percentiles("cache.admit_stall_s")
+            if pct is not None:
+                out["admit_stall_p50_s"] = pct["p50"]
+                out["admit_stall_p99_s"] = pct["p99"]
+        return out
+
+    def _finish(self, req: RequestState, outcome: str) -> None:
+        """Emit the request's lifecycle spans + TTFT proxy (no-op without
+        a tracker).  Hits resolve in one span; generated requests split
+        into queue (submit→slot) and generate (slot→done) child spans on
+        the request's own track, so a Chrome trace shows where each
+        request's latency went."""
+        trk = self._trk
+        if trk is None:
+            return
+        tags = {"rid": req.rid, "cid": req.cid, "outcome": outcome}
+        trk.add_span("serve.request", req.t_submit, req.t_done,
+                     track=req.rid, tags=tags)
+        if outcome == "hit":
+            trk.observe("serve.ttft_s", req.t_done - req.t_submit)
+            return
+        trk.add_span("serve.queue", req.t_submit, req.t_sched,
+                     track=req.rid, tags={"rid": req.rid})
+        trk.add_span("serve.generate", req.t_sched, req.t_done,
+                     track=req.rid, tags={"rid": req.rid})
+        if req.t_first:
+            trk.observe("serve.ttft_s", req.t_first - req.t_submit)
+        trk.observe("serve.queue_s", req.t_sched - req.t_submit)
 
     # -- continuous batching -------------------------------------------
     def run(self, requests: list[tuple[int, np.ndarray, list]]) -> list[RequestState]:
@@ -158,6 +211,7 @@ class ServingEngine:
             req.done = True
             req.cached = True
             req.t_done = time.perf_counter()
+            self._finish(req, "hit")
             done.append(req)
 
         def drain_hits():
@@ -229,6 +283,7 @@ class ServingEngine:
                     serve_hit(req, res)
                     continue
                 slots[i] = req
+                req.t_sched = time.perf_counter()
                 # (prefill folded into decode slots for simplicity: prompt
                 # tokens are fed one per step — fine at smoke scale)
                 req._feed = list(req.tokens)
@@ -251,6 +306,8 @@ class ServingEngine:
                     cur[i] = s._feed.pop(0)
                     continue
                 tok = int(nxt[i])
+                if not s.out_tokens:
+                    s.t_first = time.perf_counter()
                 s.out_tokens.append(tok)
                 self._gen["generated_tokens"] += 1
                 budget[i] -= 1
@@ -259,6 +316,7 @@ class ServingEngine:
                     s.t_done = time.perf_counter()
                     self.cache.admit(s.cid, s.emb,
                                      payload=list(s.out_tokens))
+                    self._finish(s, "generated")
                     done.append(s)
                     slots[i] = None
                 else:

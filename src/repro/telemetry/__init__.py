@@ -1,0 +1,43 @@
+"""Unified telemetry subsystem: pluggable trackers, mergeable metric
+primitives, and request-path tracing for the cache/serving stack.
+
+Every layer emits through one :class:`Tracker` interface
+(:mod:`~repro.telemetry.tracker`): counters, gauges, histogram
+observations (log-bucket, shard-mergeable, p50/p95/p99 —
+:mod:`~repro.telemetry.metrics`), windowed time series (hit-ratio /
+occupancy / promotion-rate over time), spans with Chrome trace-event
+export (:mod:`~repro.telemetry.tracing`), and scoped child trackers for
+consistent naming across layers.  :mod:`~repro.telemetry.report` renders
+text/JSON summaries for benchmarks and CI.
+
+Telemetry is strictly observation-only: cache decisions with any tracker
+attached are bit-identical to :data:`NOOP` (and to no tracker at all) —
+enforced by the parity test in ``tests/test_telemetry.py`` — and the
+no-op hot-path overhead is bounded by
+``benchmarks/telemetry_overhead_bench.py``.
+
+Wire-up (see ``docs/observability.md`` for the metric naming scheme)::
+
+    from repro.cache import CacheConfig, SemanticCache
+    from repro.telemetry import InMemoryTracker
+
+    trk = InMemoryTracker(window=256)
+    cache = SemanticCache(CacheConfig(capacity=512, dim=64, tracker=trk))
+    ...
+    print(trk.percentiles("cache.lookup_s"))   # {'p50': ..., 'p99': ...}
+    print(trk.series("cache.hit"))             # hit-ratio over time
+    trk.export_chrome("trace.json")            # chrome://tracing
+"""
+from .metrics import Histogram, MetricsRegistry, WindowedSeries
+from .report import render_text, summarize, write_report
+from .tracing import TraceBuffer, annotate, next_trace_id
+from .tracker import (NOOP, CompositeTracker, InMemoryTracker, JsonlTracker,
+                      NoopTracker, Tracker, make_tracker)
+
+__all__ = [
+    "Tracker", "NoopTracker", "NOOP", "InMemoryTracker", "JsonlTracker",
+    "CompositeTracker", "make_tracker",
+    "Histogram", "WindowedSeries", "MetricsRegistry",
+    "TraceBuffer", "annotate", "next_trace_id",
+    "summarize", "render_text", "write_report",
+]

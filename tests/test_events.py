@@ -1,0 +1,156 @@
+"""CacheEvent emission contract: per-operation ordering, tier tags on
+demote/promote flows, parity of the event stream between synchronous and
+async-flushed admission, and content- vs semantic-mode hit events."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cache import CacheConfig, SemanticCache, TierConfig
+from repro.core import EmbeddingSpace, SynthConfig, synthetic_trace
+
+
+def _recorder(cache, events):
+    for kind in ("hit", "miss", "admit", "evict"):
+        cache.subscribe(kind, lambda ev: events.append(ev))
+    return events
+
+
+def _drive(cache, trace):
+    for r in trace.requests:
+        res = cache.lookup(r.emb, cid=r.cid, t=r.t)
+        if not res.hit:
+            cache.admit(r.cid, r.emb, payload=(r.cid,), t=r.t)
+    cache.flush()
+
+
+@pytest.fixture(scope="module")
+def small_trace():
+    return synthetic_trace(SynthConfig(trace_len=200, n_topics=6,
+                                       dim=16, seed=2))
+
+
+# ----------------------------------------------------------- ordering
+def test_event_order_miss_admit_evict():
+    """One over-capacity admission emits miss -> admit -> evict, with the
+    evict carrying the victim's payload."""
+    cache = SemanticCache(CacheConfig(capacity=1, dim=4,
+                                      hit_mode="content", policy="LRU"))
+    events = _recorder(cache, [])
+    e = np.ones(4, dtype=np.float32)
+    cache.lookup(e, cid=1, t=1)
+    cache.admit(1, e, payload="p1", t=1)
+    cache.lookup(e, cid=2, t=2)
+    cache.admit(2, e, payload="p2", t=2)
+    kinds = [(ev.kind, ev.cid) for ev in events]
+    assert kinds == [("miss", 1), ("admit", 1),
+                     ("miss", 2), ("admit", 2), ("evict", 1)]
+    evict = events[-1]
+    assert evict.payload == "p1" and evict.tier == "device"
+    assert events[1].payload == "p1"       # admit carries its payload
+
+
+@pytest.mark.parametrize("async_admit", [False, "sync", True])
+def test_event_stream_identical_across_admission_modes(small_trace,
+                                                       async_admit):
+    """Flushing at every batch boundary makes the async event stream
+    identical to the synchronous one — same (kind, cid, t, tier) tuples
+    in the same order.  (Without flushes, deferred admissions are
+    *supposed* to change later hit decisions; parity is defined at flush
+    boundaries, which is exactly how the serving engine drives it.)"""
+    def run(mode):
+        cache = SemanticCache(CacheConfig(
+            capacity=16, dim=16, hit_mode="content", async_admit=mode))
+        events = _recorder(cache, [])
+        for r in small_trace.requests:
+            res = cache.lookup(r.emb, cid=r.cid, t=r.t)
+            if not res.hit:
+                cache.admit(r.cid, r.emb, payload=(r.cid,), t=r.t)
+            cache.flush()
+        cache.close()
+        return [(ev.kind, ev.cid, ev.t, ev.tier) for ev in events]
+
+    assert run(async_admit) == run(False)
+
+
+def test_async_flush_event_order_is_submission_order():
+    """Queued admissions apply (and emit) in FIFO submission order."""
+    cache = SemanticCache(CacheConfig(capacity=8, dim=4,
+                                      hit_mode="content",
+                                      async_admit="sync"))
+    admits = []
+    cache.subscribe("admit", lambda ev: admits.append(ev.cid))
+    e = np.ones(4, dtype=np.float32)
+    for cid in (5, 3, 9, 1):
+        cache.admit(cid, e)
+    assert admits == []                    # nothing applied before flush
+    cache.flush()
+    assert admits == [5, 3, 9, 1]
+    cache.close()
+
+
+# ------------------------------------------------------ hit-mode semantics
+def test_content_mode_hit_sim_is_nan():
+    cache = SemanticCache(CacheConfig(capacity=4, dim=4,
+                                      hit_mode="content"))
+    events = _recorder(cache, [])
+    e = np.ones(4, dtype=np.float32)
+    cache.admit(7, e, payload="x")
+    assert cache.lookup(e, cid=7).hit
+    hit = [ev for ev in events if ev.kind == "hit"][0]
+    assert math.isnan(hit.sim) and hit.payload == "x"
+
+
+def test_semantic_mode_hit_sim_clears_tau():
+    space = EmbeddingSpace(dim=16, seed=3)
+    cache = SemanticCache(CacheConfig(capacity=4, dim=16, tau_hit=0.85,
+                                      hit_mode="semantic"))
+    events = _recorder(cache, [])
+    emb = space.content_embedding(0, 1).astype(np.float32)
+    cache.admit(1, emb, payload="y")
+    assert cache.lookup(emb, cid=1).hit
+    far = -emb                             # cosine -1: a definitive miss
+    assert not cache.lookup(far, cid=2).hit
+    hit = [ev for ev in events if ev.kind == "hit"][0]
+    miss = [ev for ev in events if ev.kind == "miss"][-1]
+    assert hit.sim >= 0.85
+    assert miss.sim <= 0.0                 # best-known sim rides the event
+
+
+# ------------------------------------------------------- tier-tagged flows
+def test_demote_and_promote_tier_tags():
+    """Eviction into the host tier tags the evict event ``tier="host"``;
+    a host-tier serve emits a ``tier="host"`` hit and re-admits (promotes)
+    the entry through the normal admission path."""
+    space = EmbeddingSpace(dim=16, seed=4)
+    cache = SemanticCache(CacheConfig(
+        capacity=2, dim=16, tau_hit=0.85, hit_mode="semantic",
+        tiers=TierConfig(host_capacity=8, ghost_capacity=8)))
+    events = _recorder(cache, [])
+    embs = {i: space.content_embedding(i, i).astype(np.float32)
+            for i in range(4)}
+    for i in range(4):                     # capacity 2 -> 0,1 demoted
+        cache.admit(i, embs[i], payload=f"p{i}", t=i + 1)
+    evicts = [ev for ev in events if ev.kind == "evict"]
+    assert [ev.tier for ev in evicts] == ["host", "host"]
+    assert cache.in_host(0) and not (0 in cache)
+
+    n_admits = sum(ev.kind == "admit" for ev in events)
+    res = cache.lookup(embs[0], cid=0, t=10)   # served from host DRAM
+    assert res.hit and res.payload == "p0"
+    host_hits = [ev for ev in events if ev.kind == "hit"]
+    assert host_hits[-1].tier == "host" and host_hits[-1].cid == 0
+    # promotion re-entered via admit: a fresh admit event (+ its eviction)
+    assert sum(ev.kind == "admit" for ev in events) == n_admits + 1
+    assert 0 in cache and not cache.in_host(0)
+    promote_evict = [ev for ev in events if ev.kind == "evict"][-1]
+    assert promote_evict.tier == "host"    # displaced entry demoted too
+
+
+def test_device_hit_tier_tag_is_device(small_trace):
+    cache = SemanticCache(CacheConfig(capacity=32, dim=16,
+                                      hit_mode="content"))
+    events = _recorder(cache, [])
+    _drive(cache, small_trace)
+    hits = [ev for ev in events if ev.kind == "hit"]
+    assert hits and all(ev.tier == "device" for ev in hits)
