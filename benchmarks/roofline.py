@@ -1,5 +1,8 @@
 """Roofline table reader: aggregates dry-run JSONL records (written by
-repro.launch.dryrun --out) into the §Roofline table."""
+repro.launch.dryrun --out) into the §Roofline table, plus the
+``lookup_scan`` records the quantized-lookup bench appends
+(bench_results/lookup_scan.jsonl) as a second table — scan bytes vs the
+HBM roof for the exact and int8 candidate-generation paths."""
 from __future__ import annotations
 
 import json
@@ -8,6 +11,7 @@ import os
 from .common import emit, save_json
 
 DEFAULT_PATHS = ("bench_results/dryrun.jsonl", "/tmp/dryrun_all.jsonl")
+LOOKUP_PATHS = ("bench_results/lookup_scan.jsonl",)
 
 
 def load(path=None):
@@ -48,6 +52,39 @@ def table(recs):
     return rows
 
 
+def load_lookup(path=None):
+    """Latest ``lookup_scan`` record per (n, dim, k) cell."""
+    paths = [path] if path else list(LOOKUP_PATHS)
+    dedup = {}
+    for p in paths:
+        if p and os.path.exists(p):
+            with open(p) as f:
+                for line in f:
+                    r = json.loads(line)
+                    if r.get("kind") == "lookup_scan":
+                        dedup[(r["n"], r["dim"], r["k"])] = r
+            break
+    return list(dedup.values())
+
+
+def lookup_table(recs):
+    """Second table: exact vs int8 scan bytes against the HBM roof."""
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["n"], x["dim"], x["k"])):
+        rows.append(dict(
+            cell=f"lookup×{r['n']}×d{r['dim']}×k{r['k']}",
+            bytes_exact_mib=r["bytes_exact"] / 2**20,
+            bytes_quant_mib=r["bytes_quant"] / 2**20,
+            traffic_ratio=r["traffic_ratio"],
+            effective_gbps=r["effective_gbps"],
+            t_exact_roof_us=1e6 * r["t_exact_roof_s"],
+            t_quant_roof_us=1e6 * r["t_quant_roof_s"],
+            roof_frac=r["gbps_quant"] * 1e9 / r["hbm_bw"],
+            fallback_rate=r["fallback_rate"],
+        ))
+    return rows
+
+
 def main():
     recs = load()
     rows = table(recs)
@@ -55,7 +92,6 @@ def main():
         emit("roofline/no-data", 0.0,
              "run `python -m repro.launch.dryrun --all --out "
              "bench_results/dryrun.jsonl` first")
-        return []
     for r in rows:
         emit(f"roofline/{r['cell']}", r["t_compute_ms"] * 1e3,
              f"bottleneck={r['bottleneck']} "
@@ -63,8 +99,18 @@ def main():
              f"{r['t_collective_ms']:.1f}]ms "
              f"roofline_frac={r['roofline_frac']:.3f} "
              f"useful={r['useful_flop_frac']:.2f}")
-    save_json("roofline.json", rows)
-    return rows
+    lrows = lookup_table(load_lookup())
+    for r in lrows:
+        emit(f"roofline/{r['cell']}", r["t_quant_roof_us"],
+             f"traffic={r['traffic_ratio']:.2f}x "
+             f"roof=[{r['t_exact_roof_us']:.1f}->"
+             f"{r['t_quant_roof_us']:.1f}]us "
+             f"eff={r['effective_gbps']:.1f}GB/s "
+             f"fallback={100 * r['fallback_rate']:.1f}%")
+    if not rows and not lrows:
+        return []
+    save_json("roofline.json", {"dryrun": rows, "lookup_scan": lrows})
+    return rows + lrows
 
 
 if __name__ == "__main__":

@@ -18,8 +18,9 @@ import sys
 from . import (cache_api_bench, common, decision_path_bench, faithfulness,
                fig1_example, fig2_stress, fig3_real, fig4_ablation,
                fig5_sensitivity, kernel_bench, overhead, policy_arena_bench,
-               roofline, serving_async_bench, sharded_lookup_bench,
-               telemetry_overhead_bench, tiered_cache_bench)
+               quantized_lookup_bench, roofline, serving_async_bench,
+               sharded_lookup_bench, telemetry_overhead_bench,
+               tiered_cache_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -38,6 +39,7 @@ SUITES = {
     "arena": lambda: policy_arena_bench.main([]),  # multi-policy one-pass
     "tiered": lambda: tiered_cache_bench.main([]),  # device/host/ghost tiers
     "telemetry": lambda: telemetry_overhead_bench.main([]),  # tracker overhead
+    "quantized": lambda: quantized_lookup_bench.main([]),  # int8 scan path
 }
 
 

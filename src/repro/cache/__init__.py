@@ -39,6 +39,17 @@ device mirrors sync against, ``checkpoint()/restore()`` captures all three
 tiers, and with ``tiers=None`` (the default) every decision is
 bit-identical to the single-tier facade.
 
+Lookup candidate generation is optionally *quantized*
+(``CacheConfig.quantized_lookup``, see :mod:`repro.cache.quantized` and
+``docs/quantized_lookup.md``): every backend can scan a per-row-scaled
+int8 mirror of the embedding slab — 4× fewer slab bytes — then rescore
+the ≤k int8 survivors in fp32 against the exact rows and certify the
+result with an error-bound safety predicate, falling back to the exact
+full scan for any query it cannot certify (counted as
+``cache.rescore_fallbacks``).  Hit/miss/eviction sequences are identical
+to the exact path by construction; with the flag off (the default) the
+quantized machinery never runs and behaviour is bit-exact to before.
+
 The facade is *observable* (``CacheConfig.tracker``, see
 :mod:`repro.telemetry` and ``docs/observability.md``): attach any
 :class:`~repro.telemetry.Tracker` — or a spec string like ``"memory"``
@@ -118,6 +129,7 @@ from .async_admit import AsyncAdmitter
 from .backends import (KernelBackend, LookupBackend, NumpyBackend,
                        get_backend)
 from .facade import SemanticCache
+from .quantized import QuantizedLookupConfig
 from .sharded import ShardedKernelBackend, ShardedStore
 from .tiers import GhostTier, HostTier, TierManager, TierStats
 from .types import (CacheConfig, CacheEvent, CacheHit, CacheMetrics,
@@ -128,5 +140,5 @@ __all__ = [
     "CacheEvent", "CacheMetrics", "DecisionBatch", "LookupBackend",
     "NumpyBackend", "KernelBackend", "ShardedKernelBackend", "ShardedStore",
     "get_backend", "AsyncAdmitter", "TierConfig", "TierManager", "TierStats",
-    "HostTier", "GhostTier",
+    "HostTier", "GhostTier", "QuantizedLookupConfig",
 ]

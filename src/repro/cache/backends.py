@@ -53,6 +53,8 @@ from repro.core.policy_table import PolicyTable
 from repro.core.store import ResidentStore
 from repro.telemetry.tracing import annotate
 
+from .quantized import (QuantizedSlabMirror, account_scan,
+                        as_quantized_config, new_quant_stats, resolve_topk)
 from .types import DecisionBatch
 
 
@@ -197,11 +199,28 @@ class _DeviceMirror:
 
 
 class NumpyBackend:
-    """Host-side slab scan (the historical ``ResidentStore.nearest`` path)."""
+    """Host-side slab scan (the historical ``ResidentStore.nearest`` path).
+
+    With ``quantized`` set (a :class:`~repro.cache.quantized.
+    QuantizedLookupConfig`, or ``True``/a dict spec) this is the quantized
+    path's *host oracle*: the same per-row int8 mirror, an exact int8 gemm
+    (``kernels.quant.int8_scores``) instead of the Pallas scan, and the
+    shared rescore/certify driver — bit-identical survivor scores to the
+    device engines, so the whole quantized decision stack can be parity-
+    tested without a device."""
 
     name = "numpy"
 
+    def __init__(self, quantized=None):
+        self.quantized = as_quantized_config(quantized)
+        self.quant_stats = new_quant_stats()
+        self._qhost = QuantizedSlabMirror()
+        self._qhost_arena = QuantizedSlabMirror()
+
     def top1(self, store: ResidentStore, query: np.ndarray) -> tuple[int, float]:
+        if self.quantized is not None:
+            cids, sims = self.top1_batch(store, np.asarray(query)[None, :])
+            return int(cids[0]), float(sims[0])
         return store.nearest(query)
 
     def top1_batch(self, store: ResidentStore,
@@ -211,11 +230,49 @@ class NumpyBackend:
         if not store.slot_of:
             return (np.full(b, -1, dtype=np.int64),
                     np.full(b, -np.inf, dtype=np.float64))
+        if self.quantized is not None:
+            return self._top1_batch_quantized(store, queries)
+        return self._top1_batch_exact(store, queries)
+
+    def _top1_batch_exact(self, store: ResidentStore,
+                          queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        b = queries.shape[0]
+        if not store.slot_of:
+            return (np.full(b, -1, dtype=np.int64),
+                    np.full(b, -np.inf, dtype=np.float64))
         sims = queries @ store.emb.T                      # (B, n_slots)
         sims[:, ~store.occ] = -np.inf
         idx = np.argmax(sims, axis=1)
         return (store.cid[idx].copy(),
                 sims[np.arange(b), idx].astype(np.float64))
+
+    def _top1_batch_quantized(self, store: ResidentStore, queries: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """int8-gemm candidate scan over the host mirror + fp32 rescore.
+        Scans slots up to the high-water mark (free rows are zeros — a
+        certified free-row winner means every real score was negative,
+        the same miss decision the masked exact scan makes)."""
+        from repro.kernels.quant import (int8_scores, quantize_rows_int8,
+                                         scan_margin)
+        b = queries.shape[0]
+        hwm, dim = store.hwm, store.emb.shape[1]
+        qm = self._qhost.sync(store.version, store.dirty_since, store.emb)
+        q8, qs, ql1 = quantize_rows_int8(queries)
+        scores = (int8_scores(q8, qm.q8[:hwm])
+                  * qs[:, None]) * qm.scale[None, :hwm]
+        k = min(self.quantized.k, hwm)
+        # stable descending sort = the kernel merge's lower-index tie break
+        order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+        vals = np.take_along_axis(scores, order, axis=1).astype(np.float64)
+        eps = scan_margin(qs, ql1, qm.scale, qm.l1, dim)
+        cids, sims, n_fb, n_union = resolve_topk(
+            vals, order, eps, self.quantized.k >= hwm,
+            self.quantized.tau_hit,
+            lambda rows: self.top1_rows(store, queries, rows),
+            lambda sel: self._top1_batch_exact(store, queries[sel]))
+        account_scan(self.quant_stats, n_valid=hwm, dim=dim, batch=b,
+                     n_union=n_union, n_fallback=n_fb)
+        return cids, sims
 
     def top1_rows(self, store: ResidentStore, queries: np.ndarray,
                   rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -257,6 +314,8 @@ class NumpyBackend:
         ``tau_hit``); gate-adjacent outcomes are re-scored by the
         reference engine via the arena's epsilon flags."""
         queries = np.asarray(queries, dtype=np.float32)
+        if self.quantized is not None:
+            return self._top1_multi_quantized(arena, queries)
         b = queries.shape[0]
         n_pol, n_slots = arena.occ.shape
         flat = arena.emb.reshape(n_pol * n_slots, -1)
@@ -267,6 +326,52 @@ class NumpyBackend:
         cids = arena.cid[np.arange(n_pol)[None, :], idx].T.copy()
         sims = np.where(cids >= 0, vals.T.astype(np.float64), -np.inf)
         return cids, sims
+
+    def _top1_multi_quantized(self, arena, queries: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Stacked host oracle of the quantized arena scan: one int8 gemm
+        over the flat (P*S, D) mirror, then the shared per-policy
+        rescore/certify driver against each policy's store view."""
+        from repro.kernels.quant import (int8_scores, quantize_rows_int8,
+                                         scan_margin)
+        if not arena.track_rows:
+            raise ValueError("quantized top1_multi needs an ArenaStore "
+                             "built with track_rows=True")
+        b = queries.shape[0]
+        n_pol, n_slots = arena.occ.shape
+        dim = arena.emb.shape[-1]
+        qm = self._qhost_arena.sync(
+            arena.version, arena.dirty_since,
+            arena.emb.reshape(n_pol * n_slots, dim))
+        q8, qs, ql1 = quantize_rows_int8(queries)
+        scores3 = ((int8_scores(q8, qm.q8)
+                    * qs[:, None]) * qm.scale[None, :]
+                   ).reshape(b, n_pol, n_slots)
+        scale2 = qm.scale.reshape(n_pol, n_slots)
+        l12 = qm.l1.reshape(n_pol, n_slots)
+        hwms = arena.hwms()
+        k_cfg = self.quantized.k
+        out_c = np.full((n_pol, b), -1, dtype=np.int64)
+        out_s = np.full((n_pol, b), -np.inf)
+        for p in range(n_pol):
+            hw = int(hwms[p])
+            if hw == 0:
+                continue
+            scores = scores3[:, p, :hw]
+            k = min(k_cfg, hw)
+            order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+            vals = np.take_along_axis(scores, order,
+                                      axis=1).astype(np.float64)
+            eps = scan_margin(qs, ql1, scale2[p], l12[p], dim)
+            view = arena.views[p]
+            cids, sims, n_fb, n_union = resolve_topk(
+                vals, order, eps, k_cfg >= hw, self.quantized.tau_hit,
+                lambda rows, v=view: self.top1_rows(v, queries, rows),
+                lambda sel, v=view: self._top1_batch_exact(v, queries[sel]))
+            account_scan(self.quant_stats, n_valid=hw, dim=dim, batch=b,
+                         n_union=n_union, n_fallback=n_fb)
+            out_c[p], out_s[p] = cids, sims
+        return out_c, out_s
 
     def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
         decay = 0.5 ** (alpha * (t_now - t_last[tids]))
@@ -323,10 +428,13 @@ class KernelBackend:
     name = "kernel"
 
     def __init__(self, use_pallas: bool = True,
-                 interpret: bool | None = None, q_pad: int = 8):
+                 interpret: bool | None = None, q_pad: int = 8,
+                 quantized=None):
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.q_pad = max(1, q_pad)
+        self.quantized = as_quantized_config(quantized)
+        self.quant_stats = new_quant_stats()
         self._store_mirror = _DeviceMirror({"emb": np.float32,
                                             "occ": np.int32})
         self._slot_mirror = _DeviceMirror({"tsi": np.float32,
@@ -336,6 +444,15 @@ class KernelBackend:
                                             "tl": np.int32})
         # the arena's stacked (P*S, D) slab, synced against its flat journal
         self._arena_mirror = _DeviceMirror({"emb": np.float32})
+        # quantized path: host int8 requantizers + their device mirrors,
+        # all keyed on the same journal versions as the fp32 mirrors (the
+        # int8 uploads land in sync_stats "bytes" like any other mirror)
+        self._qhost = QuantizedSlabMirror()
+        self._qhost_arena = QuantizedSlabMirror()
+        self._q8_mirror = _DeviceMirror({"q8": np.int8,
+                                         "scale": np.float32})
+        self._q8_arena_mirror = _DeviceMirror({"q8": np.int8,
+                                               "scale": np.float32})
         self._tracker = None                # telemetry sink (observation-only)
         self._sync_seen: dict[str, int] = {}   # last sync_stats flushed to it
 
@@ -362,7 +479,8 @@ class KernelBackend:
         """Aggregate mirror observability: full uploads vs dirty-row
         scatters, total rows scattered, and host→device bytes moved."""
         mirrors = (self._store_mirror, self._slot_mirror,
-                   self._topic_mirror, self._arena_mirror)
+                   self._topic_mirror, self._arena_mirror,
+                   self._q8_mirror, self._q8_arena_mirror)
         return {k: sum(m.stats[k] for m in mirrors)
                 for k in ("full", "incremental", "rows", "bytes")}
 
@@ -372,8 +490,18 @@ class KernelBackend:
 
     def top1_batch(self, store: ResidentStore,
                    queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        from repro.kernels import ops                  # deferred: jax import
         queries = np.asarray(queries, dtype=np.float32)
+        b = queries.shape[0]
+        if not store.slot_of:
+            return (np.full(b, -1, dtype=np.int64),
+                    np.full(b, -np.inf, dtype=np.float64))
+        if self.quantized is not None:
+            return self._top1_batch_quantized(store, queries)
+        return self._top1_batch_exact(store, queries)
+
+    def _top1_batch_exact(self, store: ResidentStore,
+                          queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        from repro.kernels import ops                  # deferred: jax import
         b = queries.shape[0]
         if not store.slot_of:
             return (np.full(b, -1, dtype=np.int64),
@@ -392,6 +520,43 @@ class KernelBackend:
         cids = store.cid[idx].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
         sims = np.where(cids >= 0, vals, -np.inf)
+        return cids, sims
+
+    def _top1_batch_quantized(self, store: ResidentStore,
+                              queries: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Quantized candidate scan: the device streams the int8 mirror
+        (4× fewer slab bytes) through ``sim_topk_q8``, then the ≤k
+        survivors are rescored in fp32 by :meth:`top1_rows` — the same
+        restricted-scan engine the admission rescans trust — and certified
+        by the shared safety predicate (exact full scan on failure)."""
+        from repro.kernels import ops
+        from repro.kernels.quant import quantize_rows_int8, scan_margin
+        b = queries.shape[0]
+        dim = store.emb.shape[1]
+        qm = self._qhost.sync(store.version, store.dirty_since, store.emb)
+        dev = self._q8_mirror.sync(
+            store.version, store.dirty_since,
+            lambda: {"q8": qm.q8, "scale": qm.scale})
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        q8, qs, ql1 = quantize_rows_int8(qp)
+        k = self.quantized.k
+        with annotate("rac/sim_topk_q8"):
+            vals, idx = ops.sim_topk_q8(q8, qs, dev["q8"], dev["scale"], k,
+                                        n_valid=store.hwm,
+                                        use_pallas=self.use_pallas,
+                                        interpret=self.interpret)
+        vals = np.asarray(vals[:b], dtype=np.float64)
+        rows = np.asarray(idx[:b])
+        eps = scan_margin(qs[:b], ql1[:b], qm.scale, qm.l1, dim)
+        cids, sims, n_fb, n_union = resolve_topk(
+            vals, rows, eps, k >= store.hwm, self.quantized.tau_hit,
+            lambda r: self.top1_rows(store, queries, r),
+            lambda sel: self._top1_batch_exact(store, queries[sel]))
+        account_scan(self.quant_stats, n_valid=store.hwm, dim=dim, batch=b,
+                     n_union=n_union, n_fallback=n_fb)
+        self._flush_sync()
         return cids, sims
 
     def top1_rows(self, store: ResidentStore, queries: np.ndarray,
@@ -465,6 +630,8 @@ class KernelBackend:
         if not any(v.slot_of for v in arena.views):
             return (np.full((n_pol, b), -1, dtype=np.int64),
                     np.full((n_pol, b), -np.inf, dtype=np.float64))
+        if self.quantized is not None:
+            return self._top1_multi_quantized(arena, queries)
         pad = (-b) % self.q_pad
         qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
         dim = arena.emb.shape[-1]
@@ -483,6 +650,61 @@ class KernelBackend:
         sims = np.where(cids >= 0, vals, -np.inf)
         self._flush_sync()
         return cids, sims
+
+    def _top1_multi_quantized(self, arena, queries: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Stacked quantized arena scan: ONE ``sim_topk_q8_multi``
+        dispatch streams every policy's int8 slab (the 4× byte saving
+        multiplied by P), then each policy's survivors are rescored and
+        certified against its own store view — per-row kernel-score
+        independence makes each policy's shortlist the one its single-slab
+        launch would have produced."""
+        from repro.kernels import ops
+        from repro.kernels.quant import quantize_rows_int8, scan_margin
+        b = queries.shape[0]
+        n_pol, n_slots = arena.occ.shape
+        dim = arena.emb.shape[-1]
+        qm = self._qhost_arena.sync(
+            arena.version, arena.dirty_since,
+            arena.emb.reshape(n_pol * n_slots, dim))
+        dev = self._q8_arena_mirror.sync(
+            arena.version, arena.dirty_since,
+            lambda: {"q8": qm.q8, "scale": qm.scale})
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        q8, qs, ql1 = quantize_rows_int8(qp)
+        k = self.quantized.k
+        hwms = arena.hwms()
+        with annotate("rac/sim_topk_q8_multi"):
+            vals, idx = ops.sim_topk_q8_multi(
+                q8, qs, dev["q8"].reshape(n_pol, n_slots, dim),
+                dev["scale"].reshape(n_pol, n_slots), k, n_valid=hwms,
+                use_pallas=self.use_pallas, interpret=self.interpret)
+        vals = np.asarray(vals[:, :b], dtype=np.float64)
+        rows = np.asarray(idx[:, :b])
+        scale2 = qm.scale.reshape(n_pol, n_slots)
+        l12 = qm.l1.reshape(n_pol, n_slots)
+        out_c = np.full((n_pol, b), -1, dtype=np.int64)
+        out_s = np.full((n_pol, b), -np.inf)
+        for p in range(n_pol):
+            hw = int(hwms[p])
+            if hw == 0:
+                continue
+            eps = scan_margin(qs[:b], ql1[:b], scale2[p], l12[p], dim)
+            view = arena.views[p]
+            cids, sims, n_fb, n_union = resolve_topk(
+                vals[p], rows[p], eps, k >= hw, self.quantized.tau_hit,
+                lambda r, v=view: self.top1_rows(v, queries, r),
+                # unbound on purpose: the sharded backend delegates its
+                # stacked quantized pass here, and arena views are dense —
+                # its own _top1_batch_exact expects sharded-store geometry
+                lambda sel, v=view: KernelBackend._top1_batch_exact(
+                    self, v, queries[sel]))
+            account_scan(self.quant_stats, n_valid=hw, dim=dim, batch=b,
+                         n_union=n_union, n_fallback=n_fb)
+            out_c[p], out_s[p] = cids, sims
+        self._flush_sync()
+        return out_c, out_s
 
     def rac_value_masked(self, tsi, tids, tp_last, t_last, alpha, t_now,
                          valid):
@@ -532,6 +754,9 @@ class KernelBackend:
             return DecisionBatch(hit_cid, hit_sim,
                                  np.full(b, -1, dtype=np.int64),
                                  np.full(b, -np.inf, dtype=np.float64), None)
+        if self.quantized is not None:
+            return self._decide_batch_quantized(store, table, queries,
+                                                alpha=alpha, t_now=t_now)
         pad = (-b) % self.q_pad
         qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
         dev = self._device_state(store, table)
@@ -554,6 +779,44 @@ class KernelBackend:
                       np.asarray(ri[:b], dtype=np.int64), -1)
         self._flush_sync()
         return DecisionBatch(cids, sims, ri, rv,
+                             np.asarray(vv, dtype=np.float64))
+
+    def _decide_batch_quantized(self, store, table, queries, *, alpha,
+                                t_now):
+        """Fused decision pass with the quantized hit leg: the hit Top-1
+        rides the int8 scan + rescore (skipping the fp32 slab upload
+        entirely — the int8 mirror replaces it), while routing and victim
+        scoring run the same ``sim_top1``/``victim_value`` kernel math as
+        the exact path's fused launch (per-leg score independence keeps
+        the decisions identical)."""
+        from repro.kernels import ops
+        b = queries.shape[0]
+        hit_cid, hit_sim = self.top1_batch(store, queries)
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        slot = self._slot_mirror.sync(
+            table.slot_version, table.dirty_slots_since,
+            lambda: {"tsi": table.tsi, "tid": table.topic_of})
+        topic = self._topic_mirror.sync(
+            table.topic_version, table.dirty_topics_since,
+            lambda: {"rep": table.rep, "tp": table.tp_last,
+                     "tl": table.t_last})
+        with annotate("rac/decide_q8"):
+            rv, ri = ops.sim_top1(qp, topic["rep"],
+                                  n_valid=table.topic_hwm,
+                                  use_pallas=self.use_pallas,
+                                  interpret=self.interpret)
+            vv = ops.victim_value(slot["tsi"], slot["tid"],
+                                  np.asarray(store.occ, dtype=np.int32),
+                                  topic["tp"], topic["tl"], t_now,
+                                  alpha=float(alpha),
+                                  use_pallas=self.use_pallas,
+                                  interpret=self.interpret)
+        rv = np.asarray(rv[:b], dtype=np.float64)
+        ri = np.where(np.isfinite(rv),
+                      np.asarray(ri[:b], dtype=np.int64), -1)
+        self._flush_sync()
+        return DecisionBatch(hit_cid, hit_sim, ri, rv,
                              np.asarray(vv, dtype=np.float64))
 
 

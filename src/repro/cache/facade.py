@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import contextlib
 import copy
+import dataclasses
 import threading
 import time
 from typing import Any, Callable, Optional, Sequence
@@ -100,12 +101,28 @@ class SemanticCache:
                     "backend_kwargs "
                     f"{sorted(cfg.backend_kwargs)} cannot apply to an "
                     "already-built backend instance")
+            if cfg.quantized_lookup:
+                raise ValueError(
+                    "quantized_lookup cannot apply to an already-built "
+                    "backend instance — pass quantized= to its "
+                    "constructor instead")
             self.backend = backend
         else:
             kw = dict(cfg.backend_kwargs)
             if cfg.backend in ("kernel", "sharded"):
                 kw.setdefault("use_pallas", cfg.use_pallas)
+            if cfg.quantized_lookup:
+                # int8 candidate-scan path: fill the safety predicate's
+                # tau from the facade's own hit threshold so the
+                # certain-miss arm is live in semantic mode (content mode
+                # never gates on sims, so only the margin arm applies)
+                from .quantized import as_quantized_config
+                qcfg = as_quantized_config(cfg.quantized_lookup)
+                if qcfg.tau_hit is None and cfg.hit_mode == "semantic":
+                    qcfg = dataclasses.replace(qcfg, tau_hit=cfg.tau_hit)
+                kw.setdefault("quantized", qcfg)
             self.backend = get_backend(cfg.backend, **kw)
+        self._quant_fb_seen = 0            # rescore_fallbacks delta base
         # backends that own their store geometry (e.g. the sharded slab)
         # build it; everyone else gets the plain dense slab
         self.store = (self.backend.make_store(cfg.capacity, cfg.dim)
@@ -220,7 +237,23 @@ class SemanticCache:
             sync = getattr(self.backend, "sync_stats", None)
             if sync:
                 snap["sync"] = dict(sync)
+            quant = getattr(self.backend, "quant_stats", None)
+            if quant and quant["scans"]:
+                snap["quant"] = dict(quant)
             return snap
+
+    def _flush_quant(self):
+        """Emit the since-last-flush delta of quantized-path exact-scan
+        fallbacks as the ``cache.rescore_fallbacks`` counter (strictly
+        observation-only; call sites hold the lock)."""
+        trk = self._trk
+        if trk is None or getattr(self.backend, "quantized", None) is None:
+            return
+        fb = self.backend.quant_stats["fallbacks"]
+        d = fb - self._quant_fb_seen
+        if d:
+            trk.count("cache.rescore_fallbacks", d)
+            self._quant_fb_seen = fb
 
     def _tick(self, t: Optional[int]) -> int:
         if t is None:
@@ -285,6 +318,7 @@ class SemanticCache:
                 # windowed hit indicator over logical time -> the
                 # hit-ratio-over-time series every workload study wants
                 trk.observe("cache.hit", 1.0 if result.hit else 0.0, t)
+                self._flush_quant()
         return result
 
     def _tier_lookup(self, emb: np.ndarray, cid: int,
@@ -320,7 +354,9 @@ class SemanticCache:
         no policy/metrics side effects.  Sims are against the store as of
         this call; pair with ``lookup(..., top1=...)`` to apply results."""
         with self._lock:
-            return self.backend.top1_batch(self.store, np.asarray(embs))
+            out = self.backend.top1_batch(self.store, np.asarray(embs))
+            self._flush_quant()
+            return out
 
     def decide_batch(self, embs: np.ndarray, *,
                      t: Optional[int] = None) -> "DecisionBatch":
@@ -350,6 +386,7 @@ class SemanticCache:
                 # resident by definition)
                 dec.host_cid, dec.host_sim = \
                     self.tiers.host.top1_batch(embs)
+            self._flush_quant()
             return dec
 
     def peek_rows(self, embs: np.ndarray, cids: Sequence[int]

@@ -105,11 +105,17 @@ class ShardedKernelBackend:
     name = "sharded"
 
     def __init__(self, n_shards: int | None = None, use_pallas: bool = True,
-                 interpret: bool | None = None, q_pad: int = 8):
+                 interpret: bool | None = None, q_pad: int = 8,
+                 quantized=None):
+        from .backends import _DeviceMirror
+        from .quantized import (QuantizedSlabMirror, as_quantized_config,
+                                new_quant_stats)
         self._n_shards = n_shards
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.q_pad = max(1, q_pad)
+        self.quantized = as_quantized_config(quantized)
+        self.quant_stats = new_quant_stats()
         self._mesh = None
         self._mesh_built = False
         self._lookup_fn = None
@@ -120,13 +126,31 @@ class ShardedKernelBackend:
         self._decide_fns: dict[float, object] = {}
         self._slab_cache: dict[int, tuple] = {}    # store.version -> (slab, nv)
         self._scatter_fn = None                    # dirty-row device update
+        # quantized path: host int8 requantizer + its sharded device slab
+        # cache (same version-keyed dirty-row scatter protocol as _slab);
+        # the arena variants back the dense stacked delegation (see
+        # top1_multi) with KernelBackend-compatible mirror attributes
+        self._qhost = QuantizedSlabMirror()
+        self._qhost_arena = QuantizedSlabMirror()
+        self._q8_arena_mirror = _DeviceMirror({"q8": np.int8,
+                                               "scale": np.float32})
+        self._q8_slab_cache: dict[int, tuple] = {}
+        self._q8_scatter_fn = None
+        self._qlookup_fns: dict[int, object] = {}   # k -> shard_map lookup
         # observability for the incremental path: full uploads vs dirty-row
         # scatters, how many rows the scatters moved in total, and the
         # host→device bytes those transfers shipped
-        self.sync_stats = {"full": 0, "incremental": 0, "rows": 0,
-                           "bytes": 0}
+        self._sync = {"full": 0, "incremental": 0, "rows": 0, "bytes": 0}
         self._tracker = None                # telemetry sink (observation-only)
         self._sync_seen: dict[str, int] = {}   # last sync_stats flushed to it
+
+    @property
+    def sync_stats(self) -> dict:
+        """Aggregate sync observability: the sharded slab caches' own
+        ledger plus the dense arena-delegation device mirror — int8 mirror
+        uploads land here alongside the fp32 slab traffic."""
+        return {k: self._sync[k] + self._q8_arena_mirror.stats[k]
+                for k in ("full", "incremental", "rows", "bytes")}
 
     def set_tracker(self, tracker) -> None:
         """Attach a :class:`repro.telemetry.Tracker` child; the backend
@@ -203,8 +227,8 @@ class ShardedKernelBackend:
         nv = jax.device_put(store.local_hwm.astype(np.int32), spec)
         slab = self._incremental_slab(store, spec)
         if slab is None:
-            self.sync_stats["full"] += 1
-            self.sync_stats["bytes"] += store.emb.nbytes
+            self._sync["full"] += 1
+            self._sync["bytes"] += store.emb.nbytes
             slab = jax.device_put(np.ascontiguousarray(store.shard_view()),
                                   spec)
         if len(self._slab_cache) >= 4:              # keep a few snapshots
@@ -232,14 +256,84 @@ class ShardedKernelBackend:
                                         count=len(dirty)))
         if self._scatter_fn is None:
             self._scatter_fn = self._build_scatter()
-        self.sync_stats["incremental"] += 1
-        self.sync_stats["rows"] += len(dirty)
-        self.sync_stats["bytes"] += (slots.size * store.emb.shape[1]
+        self._sync["incremental"] += 1
+        self._sync["rows"] += len(dirty)
+        self._sync["bytes"] += (slots.size * store.emb.shape[1]
                                      * store.emb.itemsize)
         return self._scatter_fn(slab,
                                 (slots // store.rows_per_shard).astype(np.int32),
                                 (slots % store.rows_per_shard).astype(np.int32),
                                 store.emb[slots])
+
+    # ------------------------------------------------- quantized device slab
+    def _build_q8_scatter(self):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = NamedSharding(self._mesh, P("cache"))
+
+        def scatter(q8slab, csslab, shards, locals_, qv, sv):
+            return (q8slab.at[shards, locals_].set(qv),
+                    csslab.at[shards, locals_].set(sv))
+
+        return jax.jit(scatter, out_shardings=(spec, spec))
+
+    def _q8_slab(self, store: ShardedStore, qm):
+        """(S, R, D) int8 slab + (S, R) per-row scales for the quantized
+        scan, cached by store version exactly like :meth:`_slab` (dirty-row
+        scatter on a version miss, full upload otherwise).  ``qm`` is the
+        freshly synced host mirror; the host fallback scans its zero-copy
+        reshape directly, so the cache is free there."""
+        s, r = store.n_shards, store.rows_per_shard
+        if self.mesh() is None:
+            return qm.q8.reshape(s, r, -1), qm.scale.reshape(s, r)
+        hit = self._q8_slab_cache.get(store.version)
+        if hit is not None:
+            return hit
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = NamedSharding(self._mesh, P("cache"))
+        slabs = self._incremental_q8_slab(store, qm)
+        if slabs is None:
+            self._sync["full"] += 1
+            self._sync["bytes"] += qm.q8.nbytes + qm.scale.nbytes
+            slabs = (jax.device_put(
+                         np.ascontiguousarray(qm.q8.reshape(s, r, -1)), spec),
+                     jax.device_put(
+                         np.ascontiguousarray(qm.scale.reshape(s, r)), spec))
+        if len(self._q8_slab_cache) >= 4:           # keep a few snapshots
+            self._q8_slab_cache.pop(next(iter(self._q8_slab_cache)))
+        self._q8_slab_cache[store.version] = slabs
+        return slabs
+
+    def _incremental_q8_slab(self, store: ShardedStore, qm):
+        """Dirty-row DMA for the int8 slab pair: one int8 row + one fp32
+        scale per dirty slot, or None when no cached version can answer."""
+        best = None
+        for version, slabs in self._q8_slab_cache.items():
+            dirty = store.dirty_since(version)
+            if dirty is not None and (best is None
+                                      or len(dirty) < len(best[0])):
+                best = (dirty, slabs)
+        if best is None:
+            return None
+        dirty, (q8slab, csslab) = best
+        from .backends import bucket_rows, small_delta
+        if not small_delta(len(dirty), store.emb.shape[0]):
+            return None                  # not worth a scatter: bulk upload
+        if not dirty:
+            return q8slab, csslab
+        slots = bucket_rows(np.fromiter(sorted(dirty), dtype=np.int64,
+                                        count=len(dirty)))
+        if self._q8_scatter_fn is None:
+            self._q8_scatter_fn = self._build_q8_scatter()
+        self._sync["incremental"] += 1
+        self._sync["rows"] += len(dirty)
+        self._sync["bytes"] += slots.size * (store.emb.shape[1] + 4)
+        return self._q8_scatter_fn(
+            q8slab, csslab,
+            (slots // store.rows_per_shard).astype(np.int32),
+            (slots % store.rows_per_shard).astype(np.int32),
+            qm.q8[slots], qm.scale[slots])
 
     # -------------------------------------------------------------- lookup
     def _build_lookup(self):
@@ -273,6 +367,13 @@ class ShardedKernelBackend:
 
     def top1_batch(self, store: ShardedStore,
                    queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, dtype=np.float32)
+        if self.quantized is not None and store.slot_of:
+            return self._top1_batch_quantized(store, queries)
+        return self._top1_batch_exact(store, queries)
+
+    def _top1_batch_exact(self, store: ShardedStore,
+                          queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         queries = np.asarray(queries, dtype=np.float32)
         b = queries.shape[0]
         if not store.slot_of:
@@ -311,6 +412,120 @@ class ShardedKernelBackend:
         sims = np.where(cids >= 0, vals, -np.inf)
         return cids, sims
 
+    def _build_qlookup(self, ks: int, km: int):
+        """Quantized shard_map lookup: per-shard int8 Top-``ks`` merged
+        into a global Top-``km``.  The width split keeps the error-bound
+        argument sound: either ``ks`` equals the shard row count (no shard
+        can hide a row) or ``km == ks`` (any hidden row sits below its
+        shard's ``ks`` survivors, hence below the merged ``km``-th)."""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels.ops import sim_topk_q8_raw
+        use_pallas, interpret = self.use_pallas, self.interpret
+
+        def local_qtopk(q8, qs, slab, cs, nv):
+            # q8/qs replicated; slab (1, R, D) / cs (1, R) / nv (1,) = shard
+            vals, idx = sim_topk_q8_raw(q8, qs, slab[0], cs[0], nv[0], ks,
+                                        use_pallas=use_pallas,
+                                        interpret=interpret)
+            gv = jax.lax.all_gather(vals, "cache")             # (S, B, ks)
+            gi = jax.lax.all_gather(idx, "cache")              # (S, B, ks)
+            s, b = gv.shape[0], gv.shape[1]
+            offs = (jnp.arange(s, dtype=jnp.int32)
+                    * slab.shape[1])[:, None, None]
+            # shard-major concat: equal-value ties pick the earlier entry,
+            # i.e. the globally lower slot — the same tie contract as the
+            # host fallback's stable descending sort
+            allv = jnp.moveaxis(gv, 0, 1).reshape(b, s * ks)
+            alli = jnp.moveaxis(gi + offs, 0, 1).reshape(b, s * ks)
+            mv, pos = jax.lax.top_k(allv, km)
+            return mv, jnp.take_along_axis(alli, pos, axis=1)
+
+        return jax.jit(shard_map(
+            local_qtopk, mesh=self._mesh,
+            in_specs=(P(), P(), P("cache"), P("cache"), P("cache")),
+            out_specs=(P(), P()), check_rep=False))
+
+    def _top1_batch_quantized(self, store: ShardedStore, queries: np.ndarray
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Quantized candidate scan over the sharded int8 slab.
+
+        Every shard streams its (R, D) int8 block (4× fewer slab bytes)
+        through ``sim_topk_q8_raw`` and contributes k survivors; the
+        all-gathered (S·K) candidates merge into a global Top-K by one
+        ``top_k`` — the quantized analogue of the exact path's
+        argmax-reduce.  The merged union is rescored in fp32 by
+        :meth:`top1_rows` and certified by the shared safety predicate
+        (per-shard exact scan fallback), so hit/miss decisions match
+        :meth:`_top1_batch_exact` by construction.  Any row outside the
+        merged Top-K has approximate score ≤ the merged kth value (its
+        own shard kept k candidates at or above it), so the single-slab
+        error bound applies unchanged."""
+        from repro.kernels import ops
+        from repro.kernels.quant import quantize_rows_int8, scan_margin
+
+        from .quantized import account_scan, resolve_topk
+        b = queries.shape[0]
+        dim = store.emb.shape[1]
+        qm = self._qhost.sync(store.version, store.dirty_since, store.emb)
+        q8slab, csslab = self._q8_slab(store, qm)
+        pad = (-b) % self.q_pad
+        qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
+        q8, qs, ql1 = quantize_rows_int8(qp)
+        k = self.quantized.k
+        rows_per = store.rows_per_shard
+        # per-shard shortlist width cannot exceed the shard row count; the
+        # merged width then cannot exceed the concat width (see
+        # _build_qlookup for why this split keeps the bound sound)
+        ks = min(k, rows_per)
+        km = min(k, store.n_shards * ks)
+        hwm_total = int(store.local_hwm.sum())
+        if self.mesh() is not None:
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            spec = NamedSharding(self._mesh, P("cache"))
+            nv = jax.device_put(store.local_hwm.astype(np.int32), spec)
+            fn = self._qlookup_fns.get((ks, km))
+            if fn is None:
+                fn = self._qlookup_fns[(ks, km)] = self._build_qlookup(ks, km)
+            with annotate("rac/sharded_topk_q8"):
+                mv, mi = fn(q8, qs, q8slab, csslab, nv)
+            vals = np.asarray(mv[:b], dtype=np.float64)
+            rows = np.asarray(mi[:b], dtype=np.int64)
+        else:
+            # single-device fallback: same per-shard quantized kernel, and
+            # the stable descending sort implements the same lower-slot
+            # tie merge as the mesh path's shard-major top_k
+            per_v, per_i = [], []
+            with annotate("rac/sharded_topk_q8"):
+                for si in range(store.n_shards):
+                    v, i = ops.sim_topk_q8(
+                        q8, qs, q8slab[si], csslab[si], ks,
+                        n_valid=int(store.local_hwm[si]),
+                        use_pallas=self.use_pallas,
+                        interpret=self.interpret)
+                    per_v.append(np.asarray(v))
+                    per_i.append(np.asarray(i, dtype=np.int64)
+                                 + si * rows_per)
+            allv = np.concatenate(per_v, axis=1)               # (Bp, S·K)
+            alli = np.concatenate(per_i, axis=1)
+            order = np.argsort(-allv, axis=1, kind="stable")[:, :km]
+            vals = np.take_along_axis(allv, order,
+                                      axis=1)[:b].astype(np.float64)
+            rows = np.take_along_axis(alli, order, axis=1)[:b]
+        eps = scan_margin(qs[:b], ql1[:b], qm.scale, qm.l1, dim)
+        cids, sims, n_fb, n_union = resolve_topk(
+            vals, rows, eps, k >= hwm_total, self.quantized.tau_hit,
+            lambda r: self.top1_rows(store, queries, r),
+            lambda sel: self._top1_batch_exact(store, queries[sel]))
+        account_scan(self.quant_stats, n_valid=hwm_total, dim=dim, batch=b,
+                     n_union=n_union, n_fallback=n_fb)
+        self._flush_sync()
+        return cids, sims
+
     # ------------------------------------------------- multi-policy arena
     def _build_arena_scatter(self):
         import jax
@@ -345,9 +560,9 @@ class ShardedKernelBackend:
                 if dirty:
                     flat = _np.fromiter(sorted(dirty), dtype=_np.int64,
                                         count=len(dirty))
-                    self.sync_stats["incremental"] += 1
-                    self.sync_stats["rows"] += len(dirty)
-                    self.sync_stats["bytes"] += (len(dirty) * dim
+                    self._sync["incremental"] += 1
+                    self._sync["rows"] += len(dirty)
+                    self._sync["bytes"] += (len(dirty) * dim
                                                  * arena.emb.itemsize)
                     if self.mesh() is not None:
                         flat = bucket_rows(flat)
@@ -377,8 +592,8 @@ class ShardedKernelBackend:
                 [emb, _np.zeros((n_pol, tail, dim), _np.float32)], axis=1)
         slab = _np.ascontiguousarray(
             emb.reshape(n_pol, s, rows, dim).transpose(1, 0, 2, 3))
-        self.sync_stats["full"] += 1
-        self.sync_stats["bytes"] += slab.nbytes
+        self._sync["full"] += 1
+        self._sync["bytes"] += slab.nbytes
         if self.mesh() is not None:
             import jax
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -439,6 +654,13 @@ class ShardedKernelBackend:
         if not any(v.slot_of for v in arena.views):
             return (_np.full((n_pol, b), -1, dtype=_np.int64),
                     _np.full((n_pol, b), -_np.inf, dtype=_np.float64))
+        if self.quantized is not None:
+            # the stacked quantized pass is dense (arena slabs are small
+            # next to the resident slab): delegate to the KernelBackend
+            # body, which only needs the q_pad/mirror attributes this
+            # backend also carries — same precedent as top1_rows
+            from .backends import KernelBackend
+            return KernelBackend._top1_multi_quantized(self, arena, queries)
         pad = (-b) % self.q_pad
         qp = _np.pad(queries, ((0, pad), (0, 0))) if pad else queries
         s = self.n_shards
@@ -619,7 +841,9 @@ class ShardedKernelBackend:
         tp = table.tp_last.astype(np.float32)
         tl = table.t_last.astype(np.int32)
         rows = store.rows_per_shard
-        if self.mesh() is not None:
+        # quantized lookups take the split path below: its top1_batch call
+        # dispatches to the int8 scan while routing + victim stay fused
+        if self.mesh() is not None and self.quantized is None:
             slab, nv = self._slab(store)
             fn = self._decide_fns.get(float(alpha))
             if fn is None:

@@ -69,6 +69,17 @@ class CacheConfig:
     (``CacheMetrics.hook_errors`` + the ``cache.hook_errors`` tracker
     counter); with ``debug_hooks=True`` the exception propagates to the
     ``lookup``/``admit`` caller (the development mode).
+
+    ``quantized_lookup`` switches the Top-1 candidate scan onto the int8
+    per-row-scaled slab mirror (:mod:`repro.cache.quantized`): ``False``
+    (default) keeps the fp32 path bit-exactly as before; ``True`` enables
+    it with defaults; a dict or :class:`~repro.cache.quantized.
+    QuantizedLookupConfig` overrides the survivor width ``k``.  The
+    facade fills the config's ``tau_hit`` from its own when unset, so the
+    certain-miss arm of the safety predicate is active in semantic mode.
+    Decisions (hit/miss/eviction sequences) are identical to the exact
+    path by construction — queries the error margin cannot certify fall
+    back to the exact scan (``cache.rescore_fallbacks`` telemetry).
     """
 
     capacity: int
@@ -84,6 +95,7 @@ class CacheConfig:
     tiers: Optional[TierConfig] = None   # None = single-tier (bit-exact)
     tracker: Any = None                  # Tracker | spec str | None (off)
     debug_hooks: bool = False            # re-raise subscriber-hook errors
+    quantized_lookup: Any = False        # False | True | dict | config obj
 
 
 @dataclasses.dataclass

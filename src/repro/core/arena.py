@@ -171,14 +171,18 @@ def run_arena(trace: Trace, capacity: int,
               hit_mode: str = "content", tau_hit: float = 0.85,
               backend: str = "numpy", chunk: int = 512,
               use_pallas: bool = True,
-              seed: int | None = None) -> list[Stats]:
+              seed: int | None = None,
+              quantized: bool | dict = False) -> list[Stats]:
     """One-pass arena replay of every factory (see module docstring).
 
     Returns one :class:`Stats` per factory, in dict order, with hit /
     miss / eviction counts bit-identical to ``run_policy`` per policy.
     ``wall_s`` reports each policy's amortized share (total arena wall
     time / P) so throughput comparisons against sequential runs stay
-    apples-to-apples."""
+    apples-to-apples.  ``quantized`` routes the stacked Top-1 scan onto
+    the int8 mirror path (:mod:`repro.cache.quantized`) — decisions are
+    unchanged; the semantic-mode hit threshold is filled into the
+    quantized config's certain-miss arm automatically."""
     from repro.cache.backends import KernelBackend, get_backend
     from repro.cache.facade import _VALUE_HOOKS
 
@@ -190,10 +194,21 @@ def run_arena(trace: Trace, capacity: int,
     # an already-built backend object (the contract get_backend documents)
     # selects the same arena wiring as its config-name spelling
     kw = {"use_pallas": use_pallas} if backend in ("kernel", "sharded") else {}
+    if quantized:
+        import dataclasses as _dc
+
+        from repro.cache.quantized import as_quantized_config
+        qcfg = as_quantized_config(quantized)
+        if qcfg.tau_hit is None and hit_mode == "semantic":
+            qcfg = _dc.replace(qcfg, tau_hit=tau_hit)
+        kw["quantized"] = qcfg
     be = get_backend(backend, **kw)
     device = be.name in ("kernel", "sharded")
     dim = trace.requests[0].emb.shape[0]
-    arena = ArenaStore(n_pol, capacity, dim, track_rows=device)
+    # the quantized mirror keys on the arena's flat journal, so any
+    # quantized run needs row tracking even on the numpy backend
+    arena = ArenaStore(n_pol, capacity, dim,
+                       track_rows=device or bool(quantized))
     policies = [with_seed(factories[n], seed)(capacity, arena.views[i])
                 for i, n in enumerate(names)]
 

@@ -6,22 +6,19 @@ parallel all-reduce, and the quantization error is fed back into the next
 step's gradient (error-feedback keeps SGD/Adam convergence unbiased in
 expectation).  4× less DP collective traffic; optional — off by default.
 
-Pure functions so the launcher can jit them into the train step.
+Pure functions so the launcher can jit them into the train step.  The
+per-tensor int8 codec itself lives in :mod:`repro.kernels.quant` (shared
+with the cache's quantized lookup path) and is re-exported here unchanged.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import dequantize_int8, quantize_int8
 
-def quantize_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0 + 1e-30
-    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale
-
-
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
+__all__ = ["quantize_int8", "dequantize_int8", "compress_grads",
+           "decompress_grads", "init_residuals"]
 
 
 def compress_grads(grads, residuals):

@@ -21,7 +21,7 @@ from .decode_attention import decode_attention_pallas
 from .flash_attention import BQ as _FA_BQ, flash_attention_pallas
 from .rac_value import BN as _RV_BN, rac_value_pallas
 from .similarity_topk import (BC as _ST_BC, BQ as _ST_BQ, sim_top1_pallas,
-                              sim_topk_pallas)
+                              sim_topk_pallas, sim_topk_q8_pallas)
 
 
 def _is_cpu() -> bool:
@@ -110,6 +110,99 @@ def sim_topk(queries, candidates, k: int, n_valid=None, *,
         n_valid = candidates.shape[0]
     return _sim_topk_jit(queries, candidates, jnp.int32(n_valid), k=int(k),
                          use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_topk_q8_raw(q8, qscale, c8, cscale, n_valid, k: int, *,
+                    use_pallas: bool = True, interpret: bool | None = None):
+    """Un-jitted quantized Top-K body shared by :func:`sim_topk_q8` and the
+    sharded backend (per shard inside ``shard_map``).  Inputs are the int8
+    mirrors plus their per-row fp32 scales; int8 zero-padding is exact
+    (zero rows score 0 and sit behind the ``n_valid`` mask anyway)."""
+    if not use_pallas:
+        return ref.sim_topk_q8_ref(q8, qscale, c8, cscale, n_valid, k)
+    interp = _is_cpu() if interpret is None else interpret
+    qp = _pad_to(_pad_to(q8, 1, 128, value=0), 0, _ST_BQ, value=0)
+    cp = _pad_to(_pad_to(c8, 1, 128, value=0), 0, _ST_BC, value=0)
+    qs = _pad_to(qscale, 0, _ST_BQ)
+    cs = _pad_to(cscale, 0, _ST_BC)
+    vals, idx = sim_topk_q8_pallas(qp.astype(jnp.int8),
+                                   qs.astype(jnp.float32),
+                                   cp.astype(jnp.int8),
+                                   cs.astype(jnp.float32),
+                                   n_valid, k, interpret=interp)
+    return vals[: q8.shape[0]], idx[: q8.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def _sim_topk_q8_jit(q8, qscale, c8, cscale, n_valid, *, k, use_pallas,
+                     interpret):
+    return sim_topk_q8_raw(q8, qscale, c8, cscale, n_valid, k,
+                           use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_topk_q8(q8, qscale, c8, cscale, k: int, n_valid=None, *,
+                use_pallas: bool = True, interpret: bool | None = None):
+    """Quantized-slab Top-K candidate generation:
+    (Q,D)i8×(N,D)i8 -> (vals (Q,K), idx (Q,K)) of *approximate* fp32
+    similarities, same descending order / lower-index tie contract as
+    :func:`sim_topk`.
+
+    The candidate-generation half of the quantized lookup path
+    (:mod:`repro.cache.quantized`): the scan streams the 4×-smaller int8
+    slab, and the caller rescores the ≤K survivors in fp32 to make exact
+    decisions.  ``k`` is static (clamped to the candidate count — a
+    shortlist can never be wider than the slab); ``n_valid`` is the
+    runtime resident count masking the free tail."""
+    if n_valid is None:
+        n_valid = c8.shape[0]
+    return _sim_topk_q8_jit(q8, qscale, c8, cscale, jnp.int32(n_valid),
+                            k=int(min(k, c8.shape[0])),
+                            use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_topk_q8_multi_raw(q8, qscale, slabs8, cscales, n_valid, k: int, *,
+                          use_pallas: bool = True,
+                          interpret: bool | None = None):
+    """Un-jitted policy-stacked quantized Top-K body: ``slabs8`` is
+    ``(P, N, D)`` int8 with per-row scales ``cscales`` ``(P, N)`` and
+    per-policy resident counts ``n_valid`` ``(P,)``.  Same dispatch shape
+    as :func:`sim_top1_multi_raw` (grid-sequential ``lax.map`` on the
+    pallas path, vmapped oracle otherwise), with the same per-row score
+    independence: each policy's survivor set matches its own single-slab
+    launch."""
+    if use_pallas:
+        def one(args):
+            slab, cs, nv = args
+            return sim_topk_q8_raw(q8, qscale, slab, cs, nv, k,
+                                   use_pallas=True, interpret=interpret)
+
+        return jax.lax.map(one, (slabs8, cscales, n_valid))
+    return jax.vmap(
+        lambda slab, cs, nv: ref.sim_topk_q8_ref(q8, qscale, slab, cs,
+                                                 nv, k))(slabs8, cscales,
+                                                         n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def _sim_topk_q8_multi_jit(q8, qscale, slabs8, cscales, n_valid, *, k,
+                           use_pallas, interpret):
+    return sim_topk_q8_multi_raw(q8, qscale, slabs8, cscales, n_valid, k,
+                                 use_pallas=use_pallas, interpret=interpret)
+
+
+def sim_topk_q8_multi(q8, qscale, slabs8, cscales, k: int, n_valid=None, *,
+                      use_pallas: bool = True,
+                      interpret: bool | None = None):
+    """Policy-stacked quantized Top-K: (B,D)i8×(P,N,D)i8 ->
+    ((P,B,K), (P,B,K)) — the arena's stacked scan on the 4×-smaller slab,
+    where the memory saving is multiplied by P.  ``k`` is clamped to the
+    slot-axis width like :func:`sim_topk_q8`."""
+    if n_valid is None:
+        n_valid = np.full(slabs8.shape[0], slabs8.shape[1], dtype=np.int32)
+    return _sim_topk_q8_multi_jit(q8, qscale, slabs8, cscales,
+                                  jnp.asarray(n_valid, jnp.int32),
+                                  k=int(min(k, slabs8.shape[1])),
+                                  use_pallas=use_pallas, interpret=interpret)
 
 
 def sim_top1_multi_raw(queries, slabs, n_valid, *, use_pallas: bool = True,

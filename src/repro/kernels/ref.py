@@ -26,6 +26,25 @@ def sim_topk_ref(queries: jnp.ndarray, candidates: jnp.ndarray,
     return vals, idx.astype(jnp.int32)
 
 
+def sim_topk_q8_ref(q8: jnp.ndarray, qscale: jnp.ndarray,
+                    c8: jnp.ndarray, cscale: jnp.ndarray,
+                    n_valid: int, k: int):
+    """Quantized-slab Top-K oracle: exact int8×int8→int32 scores rescaled
+    per row as ``(acc * qscale) * cscale`` — the same fixed multiply order
+    as the Pallas kernel and the numpy host gemm, so all engines produce
+    bit-identical approximate similarities."""
+    acc = jax.lax.dot_general(
+        q8, c8, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    scores = (acc.astype(jnp.float32)
+              * qscale.astype(jnp.float32)[:, None]) \
+        * cscale.astype(jnp.float32)[None, :]
+    col = jnp.arange(c8.shape[0])
+    scores = jnp.where(col[None, :] < n_valid, scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True):
     """q (B,H,S,D); k/v (B,Hkv,S,D) -> (B,H,S,D).  fp32 softmax."""

@@ -88,6 +88,38 @@ def sim_top1_pallas(queries: jnp.ndarray, candidates: jnp.ndarray,
         interpret=interpret,
     )(jnp.asarray(n_valid, jnp.int32).reshape(1), queries, candidates)
 
+def _topk_fold(k: int, j, scores, col, val_ref, idx_ref):
+    """Fold one masked score tile into the running per-query Top-K held in
+    the revisited output block: K select-and-mask passes over the
+    ``[running | tile]`` concatenation.  The running list is sorted
+    descending with ties already resolved toward lower candidate index,
+    and it sits left of the (higher-index) tile columns, so argmax's
+    first-occurrence tie break keeps "lower candidate index wins"
+    globally.  Shared by the fp32 and int8 Top-K kernels — survivor sets
+    are therefore selected identically in both."""
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full((BQ, k), -jnp.inf, jnp.float32)
+        idx_ref[...] = jnp.full((BQ, k), 0, jnp.int32)
+
+    comb_v = jnp.concatenate([val_ref[...], scores], axis=1)
+    comb_i = jnp.concatenate([idx_ref[...], col], axis=1)
+    new_v, new_i = [], []
+    lane = jax.lax.broadcasted_iota(jnp.int32, comb_v.shape, 1)
+    for _ in range(k):
+        m = jnp.max(comb_v, axis=1)                  # (BQ,)
+        a = jnp.argmax(comb_v, axis=1).astype(jnp.int32)
+        hit = lane == a[:, None]
+        # one-hot max instead of gather: the selected lane's index
+        # (indices are >= 0, so the -1 fill never wins)
+        new_v.append(m)
+        new_i.append(jnp.max(jnp.where(hit, comb_i, -1), axis=1))
+        comb_v = jnp.where(hit, -jnp.inf, comb_v)
+    val_ref[...] = jnp.stack(new_v, axis=1)
+    idx_ref[...] = jnp.stack(new_i, axis=1)
+
+
 def _make_sim_topk_kernel(k: int):
     """Build a Top-K kernel for a static K (K is a compile-time constant:
     it sizes the revisited output block)."""
@@ -104,35 +136,35 @@ def _make_sim_topk_kernel(k: int):
             preferred_element_type=jnp.float32)          # (BQ, BC) on the MXU
         col = j * BC + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
         scores = jnp.where(col < n_valid, scores, -jnp.inf)
-
-        @pl.when(j == 0)
-        def _init():
-            val_ref[...] = jnp.full((BQ, k), -jnp.inf, jnp.float32)
-            idx_ref[...] = jnp.full((BQ, k), 0, jnp.int32)
-
-        # Fold the tile into the running Top-K: K select-and-mask passes
-        # over [running | tile].  The running list is sorted descending
-        # with ties already resolved toward lower candidate index, and it
-        # sits left of the (higher-index) tile columns, so argmax's
-        # first-occurrence tie break keeps "lower candidate index wins"
-        # globally.
-        comb_v = jnp.concatenate([val_ref[...], scores], axis=1)
-        comb_i = jnp.concatenate([idx_ref[...], col], axis=1)
-        new_v, new_i = [], []
-        lane = jax.lax.broadcasted_iota(jnp.int32, comb_v.shape, 1)
-        for _ in range(k):
-            m = jnp.max(comb_v, axis=1)                  # (BQ,)
-            a = jnp.argmax(comb_v, axis=1).astype(jnp.int32)
-            hit = lane == a[:, None]
-            # one-hot max instead of gather: the selected lane's index
-            # (indices are >= 0, so the -1 fill never wins)
-            new_v.append(m)
-            new_i.append(jnp.max(jnp.where(hit, comb_i, -1), axis=1))
-            comb_v = jnp.where(hit, -jnp.inf, comb_v)
-        val_ref[...] = jnp.stack(new_v, axis=1)
-        idx_ref[...] = jnp.stack(new_i, axis=1)
+        _topk_fold(k, j, scores, col, val_ref, idx_ref)
 
     return _sim_topk_kernel
+
+
+def _make_sim_topk_q8_kernel(k: int):
+    """Quantized-slab Top-K: int8 query and candidate tiles hit the MXU as
+    an int8×int8→int32 matmul (the tile streams HBM→VMEM at a quarter the
+    fp32 bytes — the whole point), then per-row scales rescale the exact
+    integer scores into fp32 approximate similarities.  The scale multiply
+    order ``(acc * qs) * cs`` is fixed across this kernel, the jnp oracle,
+    and the numpy host gemm so all engines emit bit-identical scores."""
+
+    def _sim_topk_q8_kernel(nv_ref, q_ref, qs_ref, c_ref, cs_ref,
+                            val_ref, idx_ref):
+        j = pl.program_id(1)
+        n_valid = nv_ref[0]
+        q = q_ref[...]                                   # (BQ, D) int8
+        c = c_ref[...]                                   # (BC, D) int8
+        acc = jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)            # exact int32 scores
+        scores = (acc.astype(jnp.float32)
+                  * qs_ref[...][:, None]) * cs_ref[...][None, :]
+        col = j * BC + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(col < n_valid, scores, -jnp.inf)
+        _topk_fold(k, j, scores, col, val_ref, idx_ref)
+
+    return _sim_topk_q8_kernel
 
 
 def sim_topk_pallas(queries: jnp.ndarray, candidates: jnp.ndarray,
@@ -160,3 +192,34 @@ def sim_topk_pallas(queries: jnp.ndarray, candidates: jnp.ndarray,
                    jax.ShapeDtypeStruct((q_n, k), jnp.int32)],
         interpret=interpret,
     )(jnp.asarray(n_valid, jnp.int32).reshape(1), queries, candidates)
+
+
+def sim_topk_q8_pallas(q8: jnp.ndarray, qscale: jnp.ndarray,
+                       c8: jnp.ndarray, cscale: jnp.ndarray,
+                       n_valid, k: int, *, interpret: bool = True):
+    """Top-K over a per-row-quantized slab: ``q8`` (Q, D) int8 with
+    ``qscale`` (Q,) fp32, ``c8`` (N, D) int8 with ``cscale`` (N,) fp32,
+    all padded to tile multiples (zero rows quantize to zero, so padding
+    is exact).  Returns (vals (Q, K), idx (Q, K)) of *approximate* fp32
+    similarities, same ordering/tie contract as ``sim_topk_pallas``."""
+    q_n, d = q8.shape
+    c_n = c8.shape[0]
+    assert q_n % BQ == 0 and c_n % BC == 0 and d % 128 == 0
+    assert 1 <= k <= c_n
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_n // BQ, c_n // BC),
+        in_specs=[pl.BlockSpec((BQ, d), lambda i, j, nv: (i, 0)),
+                  pl.BlockSpec((BQ,), lambda i, j, nv: (i,)),
+                  pl.BlockSpec((BC, d), lambda i, j, nv: (j, 0)),
+                  pl.BlockSpec((BC,), lambda i, j, nv: (j,))],
+        out_specs=[pl.BlockSpec((BQ, k), lambda i, j, nv: (i, 0)),
+                   pl.BlockSpec((BQ, k), lambda i, j, nv: (i, 0))])
+    return pl.pallas_call(
+        _make_sim_topk_q8_kernel(k),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+                   jax.ShapeDtypeStruct((q_n, k), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32).reshape(1),
+      q8, qscale, c8, cscale)
