@@ -1,0 +1,263 @@
+"""Topic-pruned two-stage lookup vs the exact full scan.
+
+The tentpole claim: routing each query against the (T, D) topic
+representatives and scanning only the top-P probe buckets makes lookup
+traffic scale with the *hot* working set instead of total capacity,
+while the certify-or-fallback predicate keeps hit/miss decisions
+**identical** to the exact path.  This benchmark drives
+``KernelBackend.top1_batch`` both ways over one 50k-entry clustered
+store (64 topics, OASST-style session locality: hot-topic-skewed
+near-duplicate queries plus fresh-direction misses) and reports:
+
+- the decision fingerprint: the hit mask must be identical and every
+  hit's (cid, sim) **bit-equal** (certified misses are decision-equal —
+  the reported sub-tau sim may come from the candidate set only);
+- the rows ledger from ``prune_stats`` — ``rows_exact`` (rows the full
+  scan scores) vs ``scanned_rows`` (routing + probed buckets).  The run
+  *asserts* a minimum scanned-rows reduction at the default probe width
+  (default 3.0x, env ``BENCH_PRUNE_MIN_TRAFFIC``) — CI smoke runs this
+  as a regression gate, same pattern as the quantized bench;
+- a probe-width sweep P ∈ {1, 2, 4, 8} and the composed pruned+quant
+  configuration, whose int8 candidate scan multiplies the byte
+  reduction on top of the row reduction;
+- measured wall-clock plus the modeled HBM-roof view (``BENCH_HBM_BW``,
+  v5e default 819 GB/s).  On the CPU oracle path the modeled numbers
+  are the headline; on a real accelerator the measured ones are.
+
+Every row also lands as a ``lookup_scan`` JSONL record (with
+``path`` ∈ {exact, pruned, pruned+quant}) in
+``bench_results/lookup_scan.jsonl``; ``benchmarks.roofline`` renders
+them in the same unified table as the quantized bench's rows.
+
+    PYTHONPATH=src python -m benchmarks.pruned_lookup_bench
+    PYTHONPATH=src python -m benchmarks.pruned_lookup_bench --smoke
+    PYTHONPATH=src python -m benchmarks.pruned_lookup_bench --pallas
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import OUT_DIR, emit, save_json
+
+# the same HBM roof the dry-run roofline models (v5e: 819 GB/s/chip)
+HBM_BW = float(os.environ.get("BENCH_HBM_BW", 819e9))
+MIN_TRAFFIC = float(os.environ.get("BENCH_PRUNE_MIN_TRAFFIC", "3.0"))
+
+N_ENTRIES = 50_000
+DIM = 128
+N_QUERIES = 256
+N_TOPICS = 64
+N_HOT = 4          # topics the query stream concentrates on
+TAU = 0.85
+PROBES = (1, 2, 4, 8)
+
+
+def _unit(x):
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _fill_clustered(n: int, dim: int, n_topics: int):
+    """A topically clustered store + its routing surface: ``n`` unit rows
+    in ``n_topics`` tight clusters (sigma such that intra-topic spread
+    stays well under the cross-topic gap — the regime where routing
+    margins certify), with a :class:`PolicyTable` holding the exact
+    cluster centers as representatives and the true memberships."""
+    from repro.core import ResidentStore
+    from repro.core.policy_table import PolicyTable
+    rng = np.random.default_rng(7)
+    centers = _unit(rng.standard_normal((n_topics, dim)).astype(np.float32))
+    assign = rng.integers(0, n_topics, size=n)
+    embs = _unit(centers[assign]
+                 + 0.027 * rng.standard_normal((n, dim)).astype(np.float32)
+                 ).astype(np.float32)
+    store = ResidentStore(n, dim)
+    for i in range(n):
+        store.insert(i, embs[i])
+    table = PolicyTable(store.emb.shape[0], dim)
+    for t in range(n_topics):
+        table.set_rep(t, centers[t])
+    for slot in range(n):
+        table.topic_of[slot] = assign[slot]
+        table.touch_slot(slot)
+    return store, table, embs, assign
+
+
+def _queries(embs: np.ndarray, assign: np.ndarray, n_q: int,
+             n_topics: int):
+    """Hot-topic-skewed stream: half near-duplicates of residents from
+    ``N_HOT`` hot topics (certified hits, high bucket reuse across the
+    batch — the session-locality shape the KV-cache-in-the-wild study
+    reports), half fresh directions (certain misses under tau)."""
+    rng = np.random.default_rng(13)
+    dim = embs.shape[1]
+    hot = rng.choice(n_topics, size=N_HOT, replace=False)
+    hot_rows = np.flatnonzero(np.isin(assign, hot))
+    base = embs[rng.choice(hot_rows, size=n_q)]
+    near = base + 0.005 * rng.standard_normal((n_q, dim)).astype(np.float32)
+    fresh = _unit(rng.standard_normal((n_q, dim)).astype(np.float32))
+    q = np.where((np.arange(n_q) % 2 == 0)[:, None], near, fresh)
+    return _unit(q).astype(np.float32)
+
+
+def _time(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _fingerprint(tau, c0, s0, c1, s1):
+    """Decision parity: identical hit mask, bit-equal (cid, sim) on
+    hits.  Certified misses are decision-equal only — their reported
+    best-so-far may come from the probed candidate set."""
+    hit0 = s0 >= tau
+    np.testing.assert_array_equal(hit0, s1 >= tau)
+    np.testing.assert_array_equal(c0[hit0], c1[hit0])
+    np.testing.assert_array_equal(s0[hit0], s1[hit0])
+
+
+def bench_pair(n: int, dim: int, probes: int, tau: float, use_pallas: bool,
+               repeats: int, n_q: int = N_QUERIES,
+               quantized: bool = False) -> dict:
+    """One exact-vs-pruned cell; asserts the decision fingerprint and
+    returns the measured + modeled throughput row."""
+    from repro.cache import KernelBackend
+    from repro.cache.pruned import new_prune_stats
+    store, table, embs, assign = _fill_clustered(n, dim, N_TOPICS)
+    queries = _queries(embs, assign, n_q, N_TOPICS)
+
+    ex = KernelBackend(use_pallas=use_pallas)
+    kw = {"quantized": {"k": 8, "tau_hit": tau}} if quantized else {}
+    pr = KernelBackend(use_pallas=use_pallas,
+                       pruned={"probes": probes, "tau_hit": tau}, **kw)
+    pr.route_table = table          # what the facade wires from the policy
+    pr.route_store = store
+    c0, s0 = ex.top1_batch(store, queries)          # warm (jit + upload)
+    c1, s1 = pr.top1_batch(store, queries)
+    _fingerprint(tau, c0, s0, c1, s1)
+
+    t_exact = _time(lambda: ex.top1_batch(store, queries), repeats)
+    pr.prune_stats.update(new_prune_stats())
+    t_pruned = _time(lambda: pr.top1_batch(store, queries), repeats)
+
+    st = pr.prune_stats
+    per_scan_p = st["bytes_scanned"] / st["scans"]
+    per_scan_e = st["bytes_exact"] / st["scans"]
+    rows_ratio = st["rows_exact"] / max(1, st["scanned_rows"])
+    path = "pruned+quant" if quantized else "pruned"
+    row = {
+        "path": path,
+        "n": n, "dim": dim, "probes": probes, "tau": tau,
+        "k": 8 if quantized else None,
+        "pallas": use_pallas, "queries": n_q,
+        "rows_per_query": st["scanned_rows"] / st["queries"],
+        "rows_ratio": rows_ratio,
+        "t_exact_s": t_exact, "t_pruned_s": t_pruned,
+        "speedup": t_exact / t_pruned,
+        "bytes_exact": per_scan_e, "bytes_scanned": per_scan_p,
+        "traffic_ratio": per_scan_e / per_scan_p,
+        "fallback_rate": st["fallbacks"] / st["queries"],
+        "probed_topics": st["probed_topics"] / st["queries"],
+        # measured: bytes the path actually moved per second of scan
+        "gbps_exact": per_scan_e / t_exact / 1e9,
+        "gbps_pruned": per_scan_p / t_pruned / 1e9,
+        # effective: fp32-equivalent bytes served per second of scan
+        "effective_gbps": per_scan_e / t_pruned / 1e9,
+        # modeled at the HBM roof: what a memory-bound device pays
+        "t_exact_roof_s": per_scan_e / HBM_BW,
+        "t_pruned_roof_s": per_scan_p / HBM_BW,
+        "hbm_bw": HBM_BW,
+    }
+    emit(f"pruned_lookup/n={n}/{path}/p={probes}",
+         1e6 * t_pruned / n_q,
+         f"rows/q={row['rows_per_query']:.0f}({rows_ratio:.1f}x),"
+         f"traffic={row['traffic_ratio']:.2f}x,"
+         f"fallback={100 * row['fallback_rate']:.1f}%,"
+         f"eff={row['effective_gbps']:.1f}GB/s")
+    return row
+
+
+def exact_row(n: int, dim: int, use_pallas: bool, repeats: int,
+              n_q: int = N_QUERIES) -> dict:
+    """The exact-path baseline row for the unified roofline table."""
+    from repro.cache import KernelBackend
+    store, table, embs, assign = _fill_clustered(n, dim, N_TOPICS)
+    queries = _queries(embs, assign, n_q, N_TOPICS)
+    ex = KernelBackend(use_pallas=use_pallas)
+    ex.top1_batch(store, queries)                   # warm
+    t_exact = _time(lambda: ex.top1_batch(store, queries), repeats)
+    # per-scan slab bytes, batch-amortized — the same convention as the
+    # quant/prune ledgers' bytes_exact (the slab streams once per batch)
+    bytes_e = float(store.hwm) * dim * 4
+    row = {
+        "path": "exact", "n": n, "dim": dim, "probes": None, "k": None,
+        "tau": TAU, "pallas": use_pallas, "queries": n_q,
+        "rows_per_query": float(store.hwm), "rows_ratio": 1.0,
+        "t_exact_s": t_exact, "speedup": 1.0,
+        "bytes_exact": bytes_e, "bytes_scanned": bytes_e,
+        "traffic_ratio": 1.0, "fallback_rate": 0.0,
+        "gbps_exact": bytes_e / t_exact / 1e9,
+        "effective_gbps": bytes_e / t_exact / 1e9,
+        "t_exact_roof_s": bytes_e / HBM_BW,
+        "hbm_bw": HBM_BW,
+    }
+    emit(f"pruned_lookup/n={n}/exact", 1e6 * t_exact / n_q,
+         f"rows/q={row['rows_per_query']:.0f},"
+         f"eff={row['effective_gbps']:.1f}GB/s")
+    return row
+
+
+def _append_jsonl(rows: list[dict]) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "lookup_scan.jsonl")
+    with open(path, "a") as f:
+        for r in rows:
+            f.write(json.dumps({"kind": "lookup_scan", **r}) + "\n")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    ap.add_argument("--pallas", action="store_true",
+                    help="device scans via the Pallas kernels (interpret "
+                         "mode on CPU — slow; default is the jnp oracle)")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+    n = 8_000 if args.smoke else N_ENTRIES
+    n_q = 64 if args.smoke else N_QUERIES
+    repeats = args.repeats or (2 if args.smoke else 5)
+    probes = (1, 2) if args.smoke else PROBES
+
+    rows = [exact_row(n, DIM, args.pallas, repeats, n_q=n_q)]
+    rows += [bench_pair(n, DIM, p, TAU, args.pallas, repeats, n_q=n_q)
+             for p in probes]
+    rows.append(bench_pair(n, DIM, 2, TAU, args.pallas, repeats, n_q=n_q,
+                           quantized=True))
+
+    # regression gate on the default-probe-width (P=2) cell: routing must
+    # keep lookup cost bound to the probed buckets.  rows_ratio is the
+    # gated metric (bucket rows scored vs full-slab rows) — a predicate
+    # regression shows up as exact full-scan fallbacks, which count every
+    # slab row back into scanned_rows and drag the ratio down immediately.
+    gate = next(r for r in rows if r["path"] == "pruned"
+                and r["probes"] == 2)
+    assert gate["rows_ratio"] >= MIN_TRAFFIC, (
+        f"pruned scan rows reduction {gate['rows_ratio']:.2f}x fell below "
+        f"the {MIN_TRAFFIC:.1f}x floor (BENCH_PRUNE_MIN_TRAFFIC)")
+
+    _append_jsonl(rows)
+    save_json("pruned_lookup.json",
+              {"rows": rows, "hbm_bw": HBM_BW,
+               "min_traffic": MIN_TRAFFIC, "smoke": args.smoke})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -116,11 +116,17 @@ def bench_pair(n: int, dim: int, k: int, tau: float, use_pallas: bool,
     per_scan_e = st["bytes_exact"] / st["scans"]
     traffic_ratio = per_scan_e / per_scan_q
     row = {
+        # unified lookup_scan schema: every reduced-traffic path (quant,
+        # pruned, pruned+quant) emits path/rows_per_query/bytes_scanned
+        # so benchmarks.roofline renders them as rows of ONE table
+        "path": "quant",
         "n": n, "dim": dim, "k": k, "tau": tau, "pallas": use_pallas,
         "queries": n_q,
+        "rows_per_query": float(n),      # int8 still scans every row
         "t_exact_s": t_exact, "t_quant_s": t_quant,
         "speedup": t_exact / t_quant,
         "bytes_exact": per_scan_e, "bytes_quant": per_scan_q,
+        "bytes_scanned": per_scan_q,
         "traffic_ratio": traffic_ratio,
         "fallback_rate": st["fallbacks"] / st["queries"],
         "rescore_rows": st["rescore_rows"] / st["scans"],

@@ -1,8 +1,12 @@
 """Roofline table reader: aggregates dry-run JSONL records (written by
 repro.launch.dryrun --out) into the §Roofline table, plus the
-``lookup_scan`` records the quantized-lookup bench appends
-(bench_results/lookup_scan.jsonl) as a second table — scan bytes vs the
-HBM roof for the exact and int8 candidate-generation paths."""
+``lookup_scan`` records the quantized- and pruned-lookup benches append
+(bench_results/lookup_scan.jsonl) as ONE unified second table — every
+candidate-generation path (exact baseline, int8 ``quant``, topic-
+``pruned``, composed ``pruned+quant``) renders as a row with
+scanned-rows/query, scan bytes vs the HBM roof, effective GB/s, and
+fallback rate, so the paths are comparable cell-for-cell instead of
+living in per-bench ad-hoc tables."""
 from __future__ import annotations
 
 import json
@@ -53,7 +57,9 @@ def table(recs):
 
 
 def load_lookup(path=None):
-    """Latest ``lookup_scan`` record per (n, dim, k) cell."""
+    """Latest ``lookup_scan`` record per (path, n, dim, k, probes) cell.
+    Pre-unification records carry no ``path`` field — they are the int8
+    bench's, so they dedup under ``"quant"``."""
     paths = [path] if path else list(LOOKUP_PATHS)
     dedup = {}
     for p in paths:
@@ -62,24 +68,39 @@ def load_lookup(path=None):
                 for line in f:
                     r = json.loads(line)
                     if r.get("kind") == "lookup_scan":
-                        dedup[(r["n"], r["dim"], r["k"])] = r
+                        dedup[(r.get("path", "quant"), r["n"], r["dim"],
+                               r.get("k"), r.get("probes"))] = r
             break
     return list(dedup.values())
 
 
 def lookup_table(recs):
-    """Second table: exact vs int8 scan bytes against the HBM roof."""
+    """The unified second table: one row per candidate-generation path
+    cell — exact / quant / pruned / pruned+quant — with scanned-rows per
+    query and scan bytes against the HBM roof."""
     rows = []
-    for r in sorted(recs, key=lambda x: (x["n"], x["dim"], x["k"])):
+    key = lambda x: (x["n"], x["dim"], x.get("path", "quant"),
+                     x.get("k") or 0, x.get("probes") or 0)
+    for r in sorted(recs, key=key):
+        path = r.get("path", "quant")
+        scanned = r.get("bytes_scanned", r.get("bytes_quant"))
+        tag = f"lookup×{r['n']}×d{r['dim']}×{path}"
+        if r.get("k") is not None:
+            tag += f"×k{r['k']}"
+        if r.get("probes") is not None:
+            tag += f"×p{r['probes']}"
         rows.append(dict(
-            cell=f"lookup×{r['n']}×d{r['dim']}×k{r['k']}",
+            cell=tag,
+            path=path,
+            rows_per_query=r.get("rows_per_query", float(r["n"])),
             bytes_exact_mib=r["bytes_exact"] / 2**20,
-            bytes_quant_mib=r["bytes_quant"] / 2**20,
+            bytes_scanned_mib=scanned / 2**20,
             traffic_ratio=r["traffic_ratio"],
             effective_gbps=r["effective_gbps"],
             t_exact_roof_us=1e6 * r["t_exact_roof_s"],
-            t_quant_roof_us=1e6 * r["t_quant_roof_s"],
-            roof_frac=r["gbps_quant"] * 1e9 / r["hbm_bw"],
+            t_scan_roof_us=1e6 * (scanned / r["hbm_bw"]),
+            roof_frac=(r["effective_gbps"] * 1e9
+                       * (scanned / r["bytes_exact"]) / r["hbm_bw"]),
             fallback_rate=r["fallback_rate"],
         ))
     return rows
@@ -101,10 +122,11 @@ def main():
              f"useful={r['useful_flop_frac']:.2f}")
     lrows = lookup_table(load_lookup())
     for r in lrows:
-        emit(f"roofline/{r['cell']}", r["t_quant_roof_us"],
+        emit(f"roofline/{r['cell']}", r["t_scan_roof_us"],
+             f"rows/q={r['rows_per_query']:.0f} "
              f"traffic={r['traffic_ratio']:.2f}x "
              f"roof=[{r['t_exact_roof_us']:.1f}->"
-             f"{r['t_quant_roof_us']:.1f}]us "
+             f"{r['t_scan_roof_us']:.1f}]us "
              f"eff={r['effective_gbps']:.1f}GB/s "
              f"fallback={100 * r['fallback_rate']:.1f}%")
     if not rows and not lrows:

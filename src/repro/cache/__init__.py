@@ -50,6 +50,19 @@ full scan for any query it cannot certify (counted as
 to the exact path by construction; with the flag off (the default) the
 quantized machinery never runs and behaviour is bit-exact to before.
 
+Lookup candidate generation is also optionally *topic-pruned*
+(``CacheConfig.pruned_lookup``, see :mod:`repro.cache.pruned` and
+``docs/pruned_lookup.md``): a two-stage IVF-style scan first routes each
+query against the policy's (T, D) topic-representative matrix, then
+scans only the top-P probe topics' rows through a journal-maintained
+topic→slots bucket index — so lookup traffic scales with the *hot*
+working set instead of total capacity.  A routing-margin /
+certain-miss-under-tau safety predicate certifies every decision, with
+exact full-scan fallback (counted as ``cache.prune_fallbacks``) for
+anything uncertifiable; hit/miss/eviction sequences are identical to the
+exact path by construction.  Pruning composes multiplicatively with
+``quantized_lookup`` — probed candidates stream through the int8 kernel.
+
 The facade is *observable* (``CacheConfig.tracker``, see
 :mod:`repro.telemetry` and ``docs/observability.md``): attach any
 :class:`~repro.telemetry.Tracker` — or a spec string like ``"memory"``
@@ -129,6 +142,7 @@ from .async_admit import AsyncAdmitter
 from .backends import (KernelBackend, LookupBackend, NumpyBackend,
                        get_backend)
 from .facade import SemanticCache
+from .pruned import PrunedLookupConfig
 from .quantized import QuantizedLookupConfig
 from .sharded import ShardedKernelBackend, ShardedStore
 from .tiers import GhostTier, HostTier, TierManager, TierStats
@@ -140,5 +154,5 @@ __all__ = [
     "CacheEvent", "CacheMetrics", "DecisionBatch", "LookupBackend",
     "NumpyBackend", "KernelBackend", "ShardedKernelBackend", "ShardedStore",
     "get_backend", "AsyncAdmitter", "TierConfig", "TierManager", "TierStats",
-    "HostTier", "GhostTier", "QuantizedLookupConfig",
+    "HostTier", "GhostTier", "QuantizedLookupConfig", "PrunedLookupConfig",
 ]

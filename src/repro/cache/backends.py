@@ -53,6 +53,8 @@ from repro.core.policy_table import PolicyTable
 from repro.core.store import ResidentStore
 from repro.telemetry.tracing import annotate
 
+from .pruned import (TopicBucketIndex, as_pruned_config, new_prune_stats,
+                     pruned_top1_batch, route_topics_host)
 from .quantized import (QuantizedSlabMirror, account_scan,
                         as_quantized_config, new_quant_stats, resolve_topk)
 from .types import DecisionBatch
@@ -211,14 +213,23 @@ class NumpyBackend:
 
     name = "numpy"
 
-    def __init__(self, quantized=None):
+    def __init__(self, quantized=None, pruned=None):
         self.quantized = as_quantized_config(quantized)
         self.quant_stats = new_quant_stats()
         self._qhost = QuantizedSlabMirror()
         self._qhost_arena = QuantizedSlabMirror()
+        # topic-pruned two-stage scan (cache/pruned.py): the facade wires
+        # route_table/route_store when the acting policy exposes a
+        # PolicyTable; run_arena wires route_tables (one per policy)
+        self.pruned = as_pruned_config(pruned)
+        self.prune_stats = new_prune_stats()
+        self._pidx = TopicBucketIndex()
+        self._pidx_arena: dict[int, TopicBucketIndex] = {}
+        self.route_table = None
+        self.route_store = None
 
     def top1(self, store: ResidentStore, query: np.ndarray) -> tuple[int, float]:
-        if self.quantized is not None:
+        if self.quantized is not None or self.pruned is not None:
             cids, sims = self.top1_batch(store, np.asarray(query)[None, :])
             return int(cids[0]), float(sims[0])
         return store.nearest(query)
@@ -230,6 +241,10 @@ class NumpyBackend:
         if not store.slot_of:
             return (np.full(b, -1, dtype=np.int64),
                     np.full(b, -np.inf, dtype=np.float64))
+        if self.pruned is not None:
+            out = self._top1_batch_pruned(store, queries)
+            if out is not None:
+                return out
         if self.quantized is not None:
             return self._top1_batch_quantized(store, queries)
         return self._top1_batch_exact(store, queries)
@@ -274,6 +289,115 @@ class NumpyBackend:
                      n_union=n_union, n_fallback=n_fb)
         return cids, sims
 
+    def _top1_batch_pruned(self, store: ResidentStore, queries: np.ndarray
+                           ) -> Optional[tuple]:
+        """Topic-pruned two-stage scan, host oracle: host routing matmul,
+        gathered-rows candidate scans (int8 when ``quantized`` is also
+        set), and the shared certify-or-fallback driver.  Returns ``None``
+        when the routing surface isn't wired for this store (table-less
+        policies, foreign stores like arena views) so the caller falls
+        through to the quantized/exact paths."""
+        table = self.route_table
+        if table is None or store is not self.route_store:
+            return None
+        dim = store.emb.shape[1]
+        probes = self.pruned.probes
+
+        if self.quantized is not None:
+            scan = self._make_pruned_q8_scan_host(store, queries)
+        else:
+            def scan(sel, rows):
+                c, s = self.top1_rows(store, queries[sel], rows)
+                return c, s, rows.size * dim * 4
+
+        return pruned_top1_batch(
+            store, table, queries, self.pruned, self._pidx,
+            self.prune_stats,
+            route_fn=lambda qs, aug, nt: route_topics_host(qs, aug, nt,
+                                                           probes),
+            scan_fn=scan,
+            exact_fn=lambda sel: self._top1_batch_exact(store, queries[sel]))
+
+    def _make_pruned_q8_scan_host(self, store: ResidentStore,
+                                  queries: np.ndarray):
+        """Stage-2 scan composing ``quantized_lookup``: the gathered
+        candidate block is scanned over the int8 host mirror and certified
+        by the inner ``resolve_topk`` predicate *within the candidate
+        set* (its fallback leg re-scans only the candidates — outer
+        certification against unprobed topics still happens in the pruned
+        driver).  Gathered int8 + rescore bytes land in the prune ledger;
+        the quant ledger is untouched on this path."""
+        from repro.kernels.quant import (int8_scores, quantize_rows_int8,
+                                         scan_margin)
+        dim = store.emb.shape[1]
+        qm = self._qhost.sync(store.version, store.dirty_since, store.emb)
+        k_cfg = self.quantized.k
+        tau = self.quantized.tau_hit
+
+        def scan(sel, rows):
+            qs_q = queries[sel]
+            q8, qsc, ql1 = quantize_rows_int8(qs_q)
+            scores = (int8_scores(q8, qm.q8[rows])
+                      * qsc[:, None]) * qm.scale[rows][None, :]
+            k = min(k_cfg, rows.size)
+            order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+            vals = np.take_along_axis(scores, order,
+                                      axis=1).astype(np.float64)
+            eps = scan_margin(qsc, ql1, qm.scale[rows], qm.l1[rows], dim)
+            # local shortlist indices are ascending positions into the
+            # ascending ``rows``, so the rescore keeps the lower-slot tie
+            # contract within the candidate set
+            cids, sims, n_fb, n_union = resolve_topk(
+                vals, order, eps, k_cfg >= rows.size, tau,
+                lambda lr: self.top1_rows(store, qs_q, rows[lr]),
+                lambda ss: self.top1_rows(store, qs_q[ss], rows))
+            nbytes = (rows.size * (dim + 4) + n_union * dim * 4
+                      + (rows.size * dim * 4 if n_fb else 0))
+            return cids, sims, nbytes
+
+        return scan
+
+    def _top1_multi_pruned(self, arena, queries: np.ndarray
+                           ) -> Optional[tuple]:
+        """Per-policy pruned pass over the arena's store views: each
+        table-backed policy runs the two-stage driver against its own
+        :class:`TopicBucketIndex`; table-less policies take a per-view
+        exact scan (same per-row dots as the stacked gemm).  Returns
+        ``None`` when ``run_arena`` didn't wire ``route_tables``."""
+        tables = getattr(self, "route_tables", None)
+        if tables is None:
+            return None
+        if not arena.track_rows:
+            raise ValueError("pruned top1_multi needs an ArenaStore "
+                             "built with track_rows=True")
+        b = queries.shape[0]
+        n_pol = arena.occ.shape[0]
+        dim = arena.emb.shape[-1]
+        probes = self.pruned.probes
+        out_c = np.full((n_pol, b), -1, dtype=np.int64)
+        out_s = np.full((n_pol, b), -np.inf)
+        for p in range(n_pol):
+            view = arena.views[p]
+            if not view.slot_of:
+                continue
+            table = tables[p] if p < len(tables) else None
+            if table is None:
+                cids, sims = self._top1_batch_exact(view, queries)
+            else:
+                idx = self._pidx_arena.setdefault(p, TopicBucketIndex())
+                cids, sims = pruned_top1_batch(
+                    view, table, queries, self.pruned, idx,
+                    self.prune_stats,
+                    route_fn=lambda qs, aug, nt: route_topics_host(
+                        qs, aug, nt, probes),
+                    scan_fn=lambda sel, rows, v=view: (
+                        *self.top1_rows(v, queries[sel], rows),
+                        rows.size * dim * 4),
+                    exact_fn=lambda sel, v=view: self._top1_batch_exact(
+                        v, queries[sel]))
+            out_c[p], out_s[p] = cids, sims
+        return out_c, out_s
+
     def top1_rows(self, store: ResidentStore, queries: np.ndarray,
                   rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         queries = np.asarray(queries, dtype=np.float32)
@@ -314,6 +438,10 @@ class NumpyBackend:
         ``tau_hit``); gate-adjacent outcomes are re-scored by the
         reference engine via the arena's epsilon flags."""
         queries = np.asarray(queries, dtype=np.float32)
+        if self.pruned is not None:
+            out = self._top1_multi_pruned(arena, queries)
+            if out is not None:
+                return out
         if self.quantized is not None:
             return self._top1_multi_quantized(arena, queries)
         b = queries.shape[0]
@@ -429,12 +557,24 @@ class KernelBackend:
 
     def __init__(self, use_pallas: bool = True,
                  interpret: bool | None = None, q_pad: int = 8,
-                 quantized=None):
+                 quantized=None, pruned=None):
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.q_pad = max(1, q_pad)
         self.quantized = as_quantized_config(quantized)
         self.quant_stats = new_quant_stats()
+        # topic-pruned two-stage scan (cache/pruned.py): the facade wires
+        # route_table/route_store when the acting policy exposes a
+        # PolicyTable; run_arena wires route_tables (one per policy)
+        self.pruned = as_pruned_config(pruned)
+        self.prune_stats = new_prune_stats()
+        self._pidx = TopicBucketIndex()
+        self._pidx_arena: dict[int, TopicBucketIndex] = {}
+        self.route_table = None
+        self.route_store = None
+        # the (T, D+1) augmented routing matrix [rep | spread], mirrored
+        # against the bucket index's own journal
+        self._route_mirror = _DeviceMirror({"aug": np.float32})
         self._store_mirror = _DeviceMirror({"emb": np.float32,
                                             "occ": np.int32})
         self._slot_mirror = _DeviceMirror({"tsi": np.float32,
@@ -480,7 +620,8 @@ class KernelBackend:
         scatters, total rows scattered, and host→device bytes moved."""
         mirrors = (self._store_mirror, self._slot_mirror,
                    self._topic_mirror, self._arena_mirror,
-                   self._q8_mirror, self._q8_arena_mirror)
+                   self._q8_mirror, self._q8_arena_mirror,
+                   self._route_mirror)
         return {k: sum(m.stats[k] for m in mirrors)
                 for k in ("full", "incremental", "rows", "bytes")}
 
@@ -495,6 +636,10 @@ class KernelBackend:
         if not store.slot_of:
             return (np.full(b, -1, dtype=np.int64),
                     np.full(b, -np.inf, dtype=np.float64))
+        if self.pruned is not None:
+            out = self._top1_batch_pruned(store, queries)
+            if out is not None:
+                return out
         if self.quantized is not None:
             return self._top1_batch_quantized(store, queries)
         return self._top1_batch_exact(store, queries)
@@ -558,6 +703,167 @@ class KernelBackend:
                      n_union=n_union, n_fallback=n_fb)
         self._flush_sync()
         return cids, sims
+
+    def _top1_batch_pruned(self, store: ResidentStore, queries: np.ndarray
+                           ) -> Optional[tuple]:
+        """Topic-pruned two-stage scan: stage 1 routes over the mirrored
+        (T, D+1) augmented representative matrix (``ops.route_topics``,
+        T ≪ S), stage 2 scans only the probed buckets' gathered rows
+        (int8 when ``quantized`` is also set), and the shared driver
+        certifies each decision against the unprobed-topic bound —
+        uncertifiable queries take an exact full-scan fallback.  Returns
+        ``None`` when the routing surface isn't wired for this store
+        (table-less policies, foreign stores like arena views) so the
+        caller falls through to the quantized/exact paths."""
+        from repro.kernels import ops
+        table = self.route_table
+        if table is None or store is not self.route_store:
+            return None
+        cfg = self.pruned
+        idx = self._pidx
+        dim = store.emb.shape[1]
+
+        def route(qs, aug, n_top):
+            # the driver synced ``idx`` already; freshen the device copy
+            # of the aug matrix against the index's own journal
+            dev = self._route_mirror.sync(idx.version, idx.dirty_since,
+                                          lambda: {"aug": idx.aug})
+            b = qs.shape[0]
+            pad = (-b) % self.q_pad
+            qp = np.pad(qs, ((0, pad), (0, 0))) if pad else qs
+            with annotate("rac/route_topics"):
+                vals, tids = ops.route_topics(
+                    qp, dev["aug"], cfg.probes, n_valid=n_top,
+                    use_pallas=self.use_pallas, interpret=self.interpret)
+            return np.asarray(vals[:b]), np.asarray(tids[:b])
+
+        if self.quantized is not None:
+            # unbound on purpose: the sharded backend delegates its whole
+            # pruned pass here and carries the same mirror attributes but
+            # not this helper
+            scan = KernelBackend._make_pruned_q8_scan(self, store, queries)
+        else:
+            def scan(sel, rows):
+                c, s = self.top1_rows(store, queries[sel], rows)
+                return c, s, rows.size * dim * 4
+
+        out = pruned_top1_batch(
+            store, table, queries, cfg, idx, self.prune_stats,
+            route_fn=route, scan_fn=scan,
+            exact_fn=lambda sel: self._top1_batch_exact(store, queries[sel]))
+        self._flush_sync()
+        return out
+
+    def _make_pruned_q8_scan(self, store: ResidentStore,
+                             queries: np.ndarray):
+        """Stage-2 scan composing ``quantized_lookup``: the gathered
+        candidate block is scanned as int8 through ``sim_topk_q8`` and
+        certified by the inner ``resolve_topk`` predicate *within the
+        candidate set* (its fallback leg re-scans only the candidates —
+        outer certification against unprobed topics still happens in the
+        pruned driver).  Gathered int8 + rescore bytes land in the prune
+        ledger; the quant ledger is untouched on this path."""
+        from repro.kernels import ops
+        from repro.kernels.quant import quantize_rows_int8, scan_margin
+        dim = store.emb.shape[1]
+        qm = self._qhost.sync(store.version, store.dirty_since, store.emb)
+        k_cfg = self.quantized.k
+        tau = self.quantized.tau_hit
+
+        def scan(sel, rows):
+            qs_q = queries[sel]
+            b = qs_q.shape[0]
+            pad = (-b) % self.q_pad
+            qp = np.pad(qs_q, ((0, pad), (0, 0))) if pad else qs_q
+            q8, qsc, ql1 = quantize_rows_int8(qp)
+            # bucket the gathered block like top1_rows so XLA compiles
+            # one kernel per bucket, not per distinct candidate count
+            n = rows.size
+            npad = -(-n // 64) * 64
+            c8 = np.zeros((npad, dim), dtype=np.int8)
+            c8[:n] = qm.q8[rows]
+            csc = np.zeros(npad, dtype=np.float32)
+            csc[:n] = qm.scale[rows]
+            k = min(k_cfg, n)
+            with annotate("rac/sim_topk_q8_pruned"):
+                vals, idx = ops.sim_topk_q8(q8, qsc, c8, csc, k, n_valid=n,
+                                            use_pallas=self.use_pallas,
+                                            interpret=self.interpret)
+            vals = np.asarray(vals[:b], dtype=np.float64)
+            lrows = np.asarray(idx[:b])
+            eps = scan_margin(qsc[:b], ql1[:b], qm.scale[rows],
+                              qm.l1[rows], dim)
+            # local shortlist indices are ascending positions into the
+            # ascending ``rows``, so the rescore keeps the lower-slot tie
+            # contract within the candidate set
+            cids, sims, n_fb, n_union = resolve_topk(
+                vals, lrows, eps, k_cfg >= n, tau,
+                lambda lr: self.top1_rows(store, qs_q, rows[lr]),
+                lambda ss: self.top1_rows(store, qs_q[ss], rows))
+            nbytes = (n * (dim + 4) + n_union * dim * 4
+                      + (n * dim * 4 if n_fb else 0))
+            return cids, sims, nbytes
+
+        return scan
+
+    def _top1_multi_pruned(self, arena, queries: np.ndarray
+                           ) -> Optional[tuple]:
+        """Per-policy pruned pass over the arena's store views: each
+        table-backed policy runs the two-stage driver against its own
+        :class:`TopicBucketIndex` (host routing matrices go straight to
+        the jitted kernel — per-policy device mirrors aren't worth their
+        bookkeeping at arena sizes); table-less policies take a per-view
+        exact kernel scan (same per-row f32 dots as the stacked launch).
+        Unbound-delegation-safe: the sharded backend calls this body too,
+        and arena views are dense, so the exact legs go through
+        ``KernelBackend._top1_batch_exact`` explicitly.  Returns ``None``
+        when ``run_arena`` didn't wire ``route_tables``."""
+        from repro.kernels import ops
+        tables = getattr(self, "route_tables", None)
+        if tables is None:
+            return None
+        if not arena.track_rows:
+            raise ValueError("pruned top1_multi needs an ArenaStore "
+                             "built with track_rows=True")
+        b = queries.shape[0]
+        n_pol = arena.occ.shape[0]
+        dim = arena.emb.shape[-1]
+        cfg = self.pruned
+
+        def route(qs, aug, n_top):
+            bq = qs.shape[0]
+            pad = (-bq) % self.q_pad
+            qp = np.pad(qs, ((0, pad), (0, 0))) if pad else qs
+            with annotate("rac/route_topics"):
+                vals, tids = ops.route_topics(
+                    qp, aug, cfg.probes, n_valid=n_top,
+                    use_pallas=self.use_pallas, interpret=self.interpret)
+            return np.asarray(vals[:bq]), np.asarray(tids[:bq])
+
+        out_c = np.full((n_pol, b), -1, dtype=np.int64)
+        out_s = np.full((n_pol, b), -np.inf)
+        for p in range(n_pol):
+            view = arena.views[p]
+            if not view.slot_of:
+                continue
+            table = tables[p] if p < len(tables) else None
+            if table is None:
+                cids, sims = KernelBackend._top1_batch_exact(self, view,
+                                                             queries)
+            else:
+                idx = self._pidx_arena.setdefault(p, TopicBucketIndex())
+                cids, sims = pruned_top1_batch(
+                    view, table, queries, cfg, idx, self.prune_stats,
+                    route_fn=route,
+                    scan_fn=lambda sel, rows, v=view: (
+                        *self.top1_rows(v, queries[sel], rows),
+                        rows.size * dim * 4),
+                    exact_fn=lambda sel, v=view:
+                        KernelBackend._top1_batch_exact(self, v,
+                                                        queries[sel]))
+            out_c[p], out_s[p] = cids, sims
+        self._flush_sync()
+        return out_c, out_s
 
     def top1_rows(self, store: ResidentStore, queries: np.ndarray,
                   rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -630,6 +936,10 @@ class KernelBackend:
         if not any(v.slot_of for v in arena.views):
             return (np.full((n_pol, b), -1, dtype=np.int64),
                     np.full((n_pol, b), -np.inf, dtype=np.float64))
+        if self.pruned is not None:
+            out = self._top1_multi_pruned(arena, queries)
+            if out is not None:
+                return out
         if self.quantized is not None:
             return self._top1_multi_quantized(arena, queries)
         pad = (-b) % self.q_pad
@@ -754,7 +1064,7 @@ class KernelBackend:
             return DecisionBatch(hit_cid, hit_sim,
                                  np.full(b, -1, dtype=np.int64),
                                  np.full(b, -np.inf, dtype=np.float64), None)
-        if self.quantized is not None:
+        if self.quantized is not None or self.pruned is not None:
             return self._decide_batch_quantized(store, table, queries,
                                                 alpha=alpha, t_now=t_now)
         pad = (-b) % self.q_pad
@@ -783,12 +1093,13 @@ class KernelBackend:
 
     def _decide_batch_quantized(self, store, table, queries, *, alpha,
                                 t_now):
-        """Fused decision pass with the quantized hit leg: the hit Top-1
-        rides the int8 scan + rescore (skipping the fp32 slab upload
-        entirely — the int8 mirror replaces it), while routing and victim
-        scoring run the same ``sim_top1``/``victim_value`` kernel math as
-        the exact path's fused launch (per-leg score independence keeps
-        the decisions identical)."""
+        """Fused decision pass with a reduced-traffic hit leg: the hit
+        Top-1 rides ``top1_batch`` — the topic-pruned and/or int8 scan,
+        whichever is configured (skipping the fp32 slab upload entirely
+        when quantized — the int8 mirror replaces it) — while routing and
+        victim scoring run the same ``sim_top1``/``victim_value`` kernel
+        math as the exact path's fused launch (per-leg score independence
+        keeps the decisions identical)."""
         from repro.kernels import ops
         b = queries.shape[0]
         hit_cid, hit_sim = self.top1_batch(store, queries)

@@ -106,6 +106,11 @@ class SemanticCache:
                     "quantized_lookup cannot apply to an already-built "
                     "backend instance — pass quantized= to its "
                     "constructor instead")
+            if cfg.pruned_lookup:
+                raise ValueError(
+                    "pruned_lookup cannot apply to an already-built "
+                    "backend instance — pass pruned= to its "
+                    "constructor instead")
             self.backend = backend
         else:
             kw = dict(cfg.backend_kwargs)
@@ -121,8 +126,18 @@ class SemanticCache:
                 if qcfg.tau_hit is None and cfg.hit_mode == "semantic":
                     qcfg = dataclasses.replace(qcfg, tau_hit=cfg.tau_hit)
                 kw.setdefault("quantized", qcfg)
+            if cfg.pruned_lookup:
+                # topic-pruned candidate scan: same tau-fill rule — the
+                # certain-miss arm of its safety predicate needs the hit
+                # threshold to certify sub-tau outcomes without a fallback
+                from .pruned import as_pruned_config
+                pcfg = as_pruned_config(cfg.pruned_lookup)
+                if pcfg.tau_hit is None and cfg.hit_mode == "semantic":
+                    pcfg = dataclasses.replace(pcfg, tau_hit=cfg.tau_hit)
+                kw.setdefault("pruned", pcfg)
             self.backend = get_backend(cfg.backend, **kw)
         self._quant_fb_seen = 0            # rescore_fallbacks delta base
+        self._prune_fb_seen = 0            # prune_fallbacks delta base
         # backends that own their store geometry (e.g. the sharded slab)
         # build it; everyone else gets the plain dense slab
         self.store = (self.backend.make_store(cfg.capacity, cfg.dim)
@@ -164,6 +179,14 @@ class SemanticCache:
         for attr, method in _VALUE_HOOKS:
             if hasattr(self.policy, attr):
                 setattr(self.policy, attr, getattr(self.backend, method))
+        if getattr(self.backend, "pruned", None) is not None:
+            # topic routing reads the policy's journaled PolicyTable (rep
+            # matrix + topic memberships) against this facade's store;
+            # restore() re-runs this, so store swaps stay wired.  A
+            # table-less policy leaves route_table None and the backend
+            # falls back to the exact scan (still decision-identical).
+            self.backend.route_table = getattr(self.policy, "table", None)
+            self.backend.route_store = self.store
 
     # ----------------------------------------------------------- events
     def subscribe(self, kind: str, fn: Callable[[CacheEvent], None]):
@@ -237,9 +260,18 @@ class SemanticCache:
             sync = getattr(self.backend, "sync_stats", None)
             if sync:
                 snap["sync"] = dict(sync)
+            # the reduced-traffic-scan ledgers are ALWAYS present (zeroed
+            # when the path is off) so dashboards never guard a KeyError
             quant = getattr(self.backend, "quant_stats", None)
-            if quant and quant["scans"]:
-                snap["quant"] = dict(quant)
+            if quant is None:
+                from .quantized import new_quant_stats
+                quant = new_quant_stats()
+            snap["quant"] = dict(quant)
+            prune = getattr(self.backend, "prune_stats", None)
+            if prune is None:
+                from .pruned import new_prune_stats
+                prune = new_prune_stats()
+            snap["prune"] = dict(prune)
             return snap
 
     def _flush_quant(self):
@@ -254,6 +286,19 @@ class SemanticCache:
         if d:
             trk.count("cache.rescore_fallbacks", d)
             self._quant_fb_seen = fb
+
+    def _flush_prune(self):
+        """Emit the since-last-flush delta of pruned-path exact-scan
+        fallbacks as the ``cache.prune_fallbacks`` counter (strictly
+        observation-only; call sites hold the lock)."""
+        trk = self._trk
+        if trk is None or getattr(self.backend, "pruned", None) is None:
+            return
+        fb = self.backend.prune_stats["fallbacks"]
+        d = fb - self._prune_fb_seen
+        if d:
+            trk.count("cache.prune_fallbacks", d)
+            self._prune_fb_seen = fb
 
     def _tick(self, t: Optional[int]) -> int:
         if t is None:
@@ -319,6 +364,7 @@ class SemanticCache:
                 # hit-ratio-over-time series every workload study wants
                 trk.observe("cache.hit", 1.0 if result.hit else 0.0, t)
                 self._flush_quant()
+                self._flush_prune()
         return result
 
     def _tier_lookup(self, emb: np.ndarray, cid: int,
@@ -356,6 +402,7 @@ class SemanticCache:
         with self._lock:
             out = self.backend.top1_batch(self.store, np.asarray(embs))
             self._flush_quant()
+            self._flush_prune()
             return out
 
     def decide_batch(self, embs: np.ndarray, *,
@@ -387,6 +434,7 @@ class SemanticCache:
                 dec.host_cid, dec.host_sim = \
                     self.tiers.host.top1_batch(embs)
             self._flush_quant()
+            self._flush_prune()
             return dec
 
     def peek_rows(self, embs: np.ndarray, cids: Sequence[int]

@@ -106,8 +106,10 @@ class ShardedKernelBackend:
 
     def __init__(self, n_shards: int | None = None, use_pallas: bool = True,
                  interpret: bool | None = None, q_pad: int = 8,
-                 quantized=None):
+                 quantized=None, pruned=None):
         from .backends import _DeviceMirror
+        from .pruned import (TopicBucketIndex, as_pruned_config,
+                             new_prune_stats)
         from .quantized import (QuantizedSlabMirror, as_quantized_config,
                                 new_quant_stats)
         self._n_shards = n_shards
@@ -116,6 +118,17 @@ class ShardedKernelBackend:
         self.q_pad = max(1, q_pad)
         self.quantized = as_quantized_config(quantized)
         self.quant_stats = new_quant_stats()
+        # topic-pruned two-stage scan: the routing + gathered candidate
+        # scans delegate to the dense KernelBackend body (small blocks —
+        # same rationale as top1_rows below); only the exact-fallback leg
+        # fans out across the mesh
+        self.pruned = as_pruned_config(pruned)
+        self.prune_stats = new_prune_stats()
+        self._pidx = TopicBucketIndex()
+        self._pidx_arena: dict[int, TopicBucketIndex] = {}
+        self.route_table = None
+        self.route_store = None
+        self._route_mirror = _DeviceMirror({"aug": np.float32})
         self._mesh = None
         self._mesh_built = False
         self._lookup_fn = None
@@ -147,9 +160,11 @@ class ShardedKernelBackend:
     @property
     def sync_stats(self) -> dict:
         """Aggregate sync observability: the sharded slab caches' own
-        ledger plus the dense arena-delegation device mirror — int8 mirror
-        uploads land here alongside the fp32 slab traffic."""
-        return {k: self._sync[k] + self._q8_arena_mirror.stats[k]
+        ledger plus the dense-delegation device mirrors (the arena int8
+        mirror and the pruned path's routing matrix) — their uploads land
+        here alongside the fp32 slab traffic."""
+        return {k: (self._sync[k] + self._q8_arena_mirror.stats[k]
+                    + self._route_mirror.stats[k])
                 for k in ("full", "incremental", "rows", "bytes")}
 
     def set_tracker(self, tracker) -> None:
@@ -368,9 +383,23 @@ class ShardedKernelBackend:
     def top1_batch(self, store: ShardedStore,
                    queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         queries = np.asarray(queries, dtype=np.float32)
+        if self.pruned is not None and store.slot_of:
+            out = self._top1_batch_pruned(store, queries)
+            if out is not None:
+                return out
         if self.quantized is not None and store.slot_of:
             return self._top1_batch_quantized(store, queries)
         return self._top1_batch_exact(store, queries)
+
+    def _top1_batch_pruned(self, store: ShardedStore, queries: np.ndarray):
+        # routing scores a (T, D+1) matrix and stage 2 scans small
+        # gathered candidate blocks — dense single-device work, so the
+        # whole two-stage driver delegates to the KernelBackend body
+        # (same rationale as top1_rows); the exact-fallback leg it closes
+        # over is *this* backend's _top1_batch_exact, i.e. the per-shard
+        # scan with the all_gather argmax merge
+        from .backends import KernelBackend
+        return KernelBackend._top1_batch_pruned(self, store, queries)
 
     def _top1_batch_exact(self, store: ShardedStore,
                           queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -654,6 +683,14 @@ class ShardedKernelBackend:
         if not any(v.slot_of for v in arena.views):
             return (_np.full((n_pol, b), -1, dtype=_np.int64),
                     _np.full((n_pol, b), -_np.inf, dtype=_np.float64))
+        if self.pruned is not None:
+            # the per-policy pruned pass is dense (arena slabs are small
+            # next to the resident slab): delegate to the KernelBackend
+            # body — same precedent as top1_rows
+            from .backends import KernelBackend
+            out = KernelBackend._top1_multi_pruned(self, arena, queries)
+            if out is not None:
+                return out
         if self.quantized is not None:
             # the stacked quantized pass is dense (arena slabs are small
             # next to the resident slab): delegate to the KernelBackend
@@ -841,9 +878,11 @@ class ShardedKernelBackend:
         tp = table.tp_last.astype(np.float32)
         tl = table.t_last.astype(np.int32)
         rows = store.rows_per_shard
-        # quantized lookups take the split path below: its top1_batch call
-        # dispatches to the int8 scan while routing + victim stay fused
-        if self.mesh() is not None and self.quantized is None:
+        # quantized/pruned lookups take the split path below: its
+        # top1_batch call dispatches to the reduced-traffic scan while
+        # routing + victim stay fused
+        if (self.mesh() is not None and self.quantized is None
+                and self.pruned is None):
             slab, nv = self._slab(store)
             fn = self._decide_fns.get(float(alpha))
             if fn is None:

@@ -80,6 +80,20 @@ class CacheConfig:
     Decisions (hit/miss/eviction sequences) are identical to the exact
     path by construction — queries the error margin cannot certify fall
     back to the exact scan (``cache.rescore_fallbacks`` telemetry).
+
+    ``pruned_lookup`` bounds the Top-1 candidate scan to the few topics
+    a query can plausibly land in (:mod:`repro.cache.pruned`): stage 1
+    routes the query against the (T, D) topic-representative matrix,
+    stage 2 scans only the probed topics' rows through a journal-
+    maintained topic->slots bucket index.  ``False`` (default) keeps the
+    full scan; ``True`` enables it with defaults; a dict or
+    :class:`~repro.cache.pruned.PrunedLookupConfig` overrides the probe
+    width.  The facade fills ``tau_hit`` from its own when unset.  A
+    routing-margin / certain-miss safety predicate certifies every
+    decision, with exact full-scan fallback (``cache.prune_fallbacks``)
+    for anything uncertifiable — decisions stay identical to the exact
+    path by construction.  Composes with ``quantized_lookup`` (the
+    probed candidate slab is scanned through the int8 kernel).
     """
 
     capacity: int
@@ -96,6 +110,7 @@ class CacheConfig:
     tracker: Any = None                  # Tracker | spec str | None (off)
     debug_hooks: bool = False            # re-raise subscriber-hook errors
     quantized_lookup: Any = False        # False | True | dict | config obj
+    pruned_lookup: Any = False           # False | True | dict | config obj
 
 
 @dataclasses.dataclass

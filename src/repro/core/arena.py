@@ -172,7 +172,8 @@ def run_arena(trace: Trace, capacity: int,
               backend: str = "numpy", chunk: int = 512,
               use_pallas: bool = True,
               seed: int | None = None,
-              quantized: bool | dict = False) -> list[Stats]:
+              quantized: bool | dict = False,
+              pruned: bool | dict = False) -> list[Stats]:
     """One-pass arena replay of every factory (see module docstring).
 
     Returns one :class:`Stats` per factory, in dict order, with hit /
@@ -182,7 +183,11 @@ def run_arena(trace: Trace, capacity: int,
     apples-to-apples.  ``quantized`` routes the stacked Top-1 scan onto
     the int8 mirror path (:mod:`repro.cache.quantized`) — decisions are
     unchanged; the semantic-mode hit threshold is filled into the
-    quantized config's certain-miss arm automatically."""
+    quantized config's certain-miss arm automatically.  ``pruned`` routes
+    it through the topic-pruned two-stage scan (:mod:`repro.cache.
+    pruned`) instead — each table-backed policy's probe runs over its own
+    per-policy bucket index; table-less policies fall back to the exact
+    per-view scan.  The two compose (``pruned`` + ``quantized``)."""
     from repro.cache.backends import KernelBackend, get_backend
     from repro.cache.facade import _VALUE_HOOKS
 
@@ -202,15 +207,28 @@ def run_arena(trace: Trace, capacity: int,
         if qcfg.tau_hit is None and hit_mode == "semantic":
             qcfg = _dc.replace(qcfg, tau_hit=tau_hit)
         kw["quantized"] = qcfg
+    if pruned:
+        import dataclasses as _dc
+
+        from repro.cache.pruned import as_pruned_config
+        pcfg = as_pruned_config(pruned)
+        if pcfg.tau_hit is None and hit_mode == "semantic":
+            pcfg = _dc.replace(pcfg, tau_hit=tau_hit)
+        kw["pruned"] = pcfg
     be = get_backend(backend, **kw)
     device = be.name in ("kernel", "sharded")
     dim = trace.requests[0].emb.shape[0]
-    # the quantized mirror keys on the arena's flat journal, so any
-    # quantized run needs row tracking even on the numpy backend
+    # the quantized mirror and the pruned bucket indices key on the
+    # arena's flat journal, so either path needs row tracking even on
+    # the numpy backend
     arena = ArenaStore(n_pol, capacity, dim,
-                       track_rows=device or bool(quantized))
+                       track_rows=device or bool(quantized) or bool(pruned))
     policies = [with_seed(factories[n], seed)(capacity, arena.views[i])
                 for i, n in enumerate(names)]
+    if pruned:
+        # per-policy routing tables: each table-backed policy probes its
+        # own topic structure; None entries take the exact per-view scan
+        be.route_tables = [getattr(pol, "table", None) for pol in policies]
 
     # reference engine for flagged single-query rescans: the backend itself,
     # except under "sharded" where a dense kernel scan computes the same

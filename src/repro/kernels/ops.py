@@ -112,6 +112,43 @@ def sim_topk(queries, candidates, k: int, n_valid=None, *,
                          use_pallas=use_pallas, interpret=interpret)
 
 
+def route_topics_raw(queries, reps_aug, n_valid, k: int, *,
+                     use_pallas: bool = True, interpret: bool | None = None):
+    """Un-jitted topic-routing body: augment each query with its L2 norm
+    and Top-K the (T, D+1) bound matrix ``[rep | spread]`` — the matmul
+    computes ``q·rep_t + ‖q‖·spread_t`` directly (see cache/pruned.py)."""
+    qf = queries.astype(jnp.float32)
+    qn = jnp.sqrt(jnp.sum(qf * qf, axis=1, keepdims=True))
+    qa = jnp.concatenate([qf, qn], axis=1)
+    return sim_topk_raw(qa, reps_aug, n_valid, k,
+                        use_pallas=use_pallas, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def _route_topics_jit(queries, reps_aug, n_valid, *, k, use_pallas,
+                      interpret):
+    return route_topics_raw(queries, reps_aug, n_valid, k,
+                            use_pallas=use_pallas, interpret=interpret)
+
+
+def route_topics(queries, reps_aug, probes: int, n_valid=None, *,
+                 use_pallas: bool = True, interpret: bool | None = None):
+    """Stage-1 routing for the pruned lookup: (Q,D)x(T,D+1) ->
+    (bounds (Q,K), tids (Q,K)), K = probes+1, sorted descending.
+
+    ``reps_aug`` row ``t`` is ``[rep_t | spread_t]`` so scoring the
+    norm-augmented query yields each topic's Cauchy–Schwarz score bound;
+    the leading ``probes`` columns are the probe set and column
+    ``probes`` (when present) bounds every unprobed topic.  ``n_valid``
+    masks retired/unborn topic rows to (-inf, undefined), so with fewer
+    live topics than probes the unprobed bound is naturally -inf."""
+    if n_valid is None:
+        n_valid = reps_aug.shape[0]
+    k = int(min(probes + 1, reps_aug.shape[0]))
+    return _route_topics_jit(queries, reps_aug, jnp.int32(n_valid), k=k,
+                             use_pallas=use_pallas, interpret=interpret)
+
+
 def sim_topk_q8_raw(q8, qscale, c8, cscale, n_valid, k: int, *,
                     use_pallas: bool = True, interpret: bool | None = None):
     """Un-jitted quantized Top-K body shared by :func:`sim_topk_q8` and the

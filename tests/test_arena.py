@@ -301,6 +301,7 @@ def test_kernel_top1_multi_tracks_mutations(rng):
     assert kb._arena_mirror.stats["incremental"] >= 1
 
 
+@pytest.mark.slow_mesh
 def test_sharded_top1_multi_shard_map_in_subprocess():
     """4-device mesh: the stacked per-shard launch + argmax merge equals
     the numpy oracle."""

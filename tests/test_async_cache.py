@@ -233,6 +233,7 @@ def test_dirty_since_diverged_copy_refused():
     assert store.dirty_since(twin.version) is None
 
 
+@pytest.mark.slow_mesh
 def test_sharded_incremental_sync_in_subprocess():
     """Mesh path: after the first full upload, small mutations reach the
     device slab via a dirty-row scatter — and lookups stay bit-identical

@@ -334,6 +334,7 @@ def test_sharded_checkpoint_restore_roundtrip():
     assert cache.lookup(embs[3], cid=3).hit
 
 
+@pytest.mark.slow_mesh
 def test_sharded_shard_map_path_in_subprocess():
     """With enough devices the mesh path (shard_map + all_gather argmax
     merge) is exercised end-to-end and agrees with the numpy backend."""

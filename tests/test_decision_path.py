@@ -167,6 +167,7 @@ def test_policy_table_journal_semantics():
             == len(tb.rep_valid) >= 601)
 
 
+@pytest.mark.slow_mesh
 def test_sharded_fused_decide_shard_map_in_subprocess():
     """With enough devices the fused decision pass runs under shard_map
     (per-shard sim_top1 + victim slices, all_gather argmax merge) and
