@@ -113,6 +113,15 @@ def _time(fn, repeats: int) -> float:
     return best
 
 
+def _dispatch_delta(fn):
+    """Run ``fn`` once and return the launch/sync/kernel-interval deltas
+    it cost (``repro.kernels.ops.dispatch_stats`` is process-global)."""
+    from repro.kernels import ops
+    before = dict(ops.dispatch_stats)
+    fn()
+    return {k: ops.dispatch_stats[k] - before[k] for k in before}
+
+
 def _fingerprint(tau, c0, s0, c1, s1):
     """Decision parity: identical hit mask, bit-equal (cid, sim) on
     hits.  Certified misses are decision-equal only — their reported
@@ -146,6 +155,7 @@ def bench_pair(n: int, dim: int, probes: int, tau: float, use_pallas: bool,
     t_exact = _time(lambda: ex.top1_batch(store, queries), repeats)
     pr.prune_stats.update(new_prune_stats())
     t_pruned = _time(lambda: pr.top1_batch(store, queries), repeats)
+    disp = _dispatch_delta(lambda: pr.top1_batch(store, queries))
 
     st = pr.prune_stats
     per_scan_p = st["bytes_scanned"] / st["scans"]
@@ -174,6 +184,13 @@ def bench_pair(n: int, dim: int, probes: int, tau: float, use_pallas: bool,
         "t_exact_roof_s": per_scan_e / HBM_BW,
         "t_pruned_roof_s": per_scan_p / HBM_BW,
         "hbm_bw": HBM_BW,
+        # dispatch ledger for one batch pass: jitted launches, blocking
+        # device→host syncs, and seconds inside the timed kernel
+        # intervals (the roofline renders the kernel-interval roof view
+        # from t_kernel_s)
+        "launches": disp["launches"],
+        "host_syncs": disp["host_syncs"],
+        "t_kernel_s": disp["kernel_s"],
     }
     emit(f"pruned_lookup/n={n}/{path}/p={probes}",
          1e6 * t_pruned / n_q,
@@ -193,6 +210,7 @@ def exact_row(n: int, dim: int, use_pallas: bool, repeats: int,
     ex = KernelBackend(use_pallas=use_pallas)
     ex.top1_batch(store, queries)                   # warm
     t_exact = _time(lambda: ex.top1_batch(store, queries), repeats)
+    disp = _dispatch_delta(lambda: ex.top1_batch(store, queries))
     # per-scan slab bytes, batch-amortized — the same convention as the
     # quant/prune ledgers' bytes_exact (the slab streams once per batch)
     bytes_e = float(store.hwm) * dim * 4
@@ -207,6 +225,9 @@ def exact_row(n: int, dim: int, use_pallas: bool, repeats: int,
         "effective_gbps": bytes_e / t_exact / 1e9,
         "t_exact_roof_s": bytes_e / HBM_BW,
         "hbm_bw": HBM_BW,
+        "launches": disp["launches"],
+        "host_syncs": disp["host_syncs"],
+        "t_kernel_s": disp["kernel_s"],
     }
     emit(f"pruned_lookup/n={n}/exact", 1e6 * t_exact / n_q,
          f"rows/q={row['rows_per_query']:.0f},"

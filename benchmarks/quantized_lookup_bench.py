@@ -110,6 +110,8 @@ def bench_pair(n: int, dim: int, k: int, tau: float, use_pallas: bool,
     qz.quant_stats.update(scans=0, queries=0, fallbacks=0, rescore_rows=0,
                           bytes_scanned=0, bytes_exact=0)
     t_quant = _time(lambda: qz.top1_batch(store, queries), repeats)
+    from .pruned_lookup_bench import _dispatch_delta
+    disp = _dispatch_delta(lambda: qz.top1_batch(store, queries))
 
     st = qz.quant_stats
     per_scan_q = st["bytes_scanned"] / st["scans"]
@@ -141,6 +143,11 @@ def bench_pair(n: int, dim: int, k: int, tau: float, use_pallas: bool,
         "t_quant_roof_s": per_scan_q / HBM_BW,
         "roof_speedup": traffic_ratio,
         "hbm_bw": HBM_BW,
+        # dispatch ledger for one batch pass (launches / blocking syncs /
+        # timed kernel-interval seconds — roofline's kernel-roof view)
+        "launches": disp["launches"],
+        "host_syncs": disp["host_syncs"],
+        "t_kernel_s": disp["kernel_s"],
     }
     emit(f"quantized_lookup/n={n}/k={k}/tau={tau}",
          1e6 * t_quant / n_q,

@@ -17,10 +17,10 @@ import sys
 
 from . import (cache_api_bench, common, decision_path_bench, faithfulness,
                fig1_example, fig2_stress, fig3_real, fig4_ablation,
-               fig5_sensitivity, kernel_bench, overhead, policy_arena_bench,
-               quantized_lookup_bench, roofline, serving_async_bench,
-               sharded_lookup_bench, telemetry_overhead_bench,
-               tiered_cache_bench)
+               fig5_sensitivity, fused_pipeline_bench, kernel_bench, overhead,
+               policy_arena_bench, quantized_lookup_bench, roofline,
+               serving_async_bench, sharded_lookup_bench,
+               telemetry_overhead_bench, tiered_cache_bench)
 
 SUITES = {
     "fig1": fig1_example.main,      # Example 1 / Figure 1 demonstration
@@ -40,6 +40,7 @@ SUITES = {
     "tiered": lambda: tiered_cache_bench.main([]),  # device/host/ghost tiers
     "telemetry": lambda: telemetry_overhead_bench.main([]),  # tracker overhead
     "quantized": lambda: quantized_lookup_bench.main([]),  # int8 scan path
+    "fused": lambda: fused_pipeline_bench.main([]),  # one-launch decision path
 }
 
 

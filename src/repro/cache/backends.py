@@ -53,8 +53,8 @@ from repro.core.policy_table import PolicyTable
 from repro.core.store import ResidentStore
 from repro.telemetry.tracing import annotate
 
-from .pruned import (TopicBucketIndex, as_pruned_config, new_prune_stats,
-                     pruned_top1_batch, route_topics_host)
+from .pruned import (TopicBucketIndex, account_prune, as_pruned_config,
+                     new_prune_stats, pruned_top1_batch, route_topics_host)
 from .quantized import (QuantizedSlabMirror, account_scan,
                         as_quantized_config, new_quant_stats, resolve_topk)
 from .types import DecisionBatch
@@ -590,9 +590,17 @@ class KernelBackend:
         self._qhost = QuantizedSlabMirror()
         self._qhost_arena = QuantizedSlabMirror()
         self._q8_mirror = _DeviceMirror({"q8": np.int8,
-                                         "scale": np.float32})
+                                         "scale": np.float32,
+                                         "l1": np.float32})
         self._q8_arena_mirror = _DeviceMirror({"q8": np.int8,
-                                               "scale": np.float32})
+                                               "scale": np.float32,
+                                               "l1": np.float32})
+        # fused pipeline: device CSR copy of the topic-bucket index, keyed
+        # on the index's (store, table) journal triple — NOT its aug
+        # version (unassigned-only churn doesn't move the aug journal)
+        self._csr_mirror = _DeviceMirror({"indptr": np.int32,
+                                          "slots": np.int32})
+        self._csr_arena: dict[int, _DeviceMirror] = {}
         self._tracker = None                # telemetry sink (observation-only)
         self._sync_seen: dict[str, int] = {}   # last sync_stats flushed to it
 
@@ -621,9 +629,18 @@ class KernelBackend:
         mirrors = (self._store_mirror, self._slot_mirror,
                    self._topic_mirror, self._arena_mirror,
                    self._q8_mirror, self._q8_arena_mirror,
-                   self._route_mirror)
+                   self._route_mirror, self._csr_mirror,
+                   *self._csr_arena.values())
         return {k: sum(m.stats[k] for m in mirrors)
                 for k in ("full", "incremental", "rows", "bytes")}
+
+    @property
+    def dispatch_stats(self) -> dict:
+        """Launch/transfer observability: jitted dispatches issued, blocking
+        device→host syncs, and seconds spent inside timed kernel intervals.
+        Process-global (the jit caches are too) — consumers read deltas."""
+        from repro.kernels import ops
+        return dict(ops.dispatch_stats)
 
     def top1(self, store: ResidentStore, query: np.ndarray) -> tuple[int, float]:
         cids, sims = self.top1_batch(store, np.asarray(query)[None, :])
@@ -657,11 +674,13 @@ class KernelBackend:
         # never been occupied, so the kernel skips scoring the free tail
         # (one compilation — the count is scalar-prefetched, not baked in)
         with annotate("rac/sim_top1"):
-            vals, idx = ops.sim_top1(qp, store.emb, n_valid=store.hwm,
+            vals, idx = ops.run_timed(
+                lambda: ops.sim_top1(qp, store.emb, n_valid=store.hwm,
                                      use_pallas=self.use_pallas,
-                                     interpret=self.interpret)
-        vals = np.asarray(vals[:b], dtype=np.float64)
-        idx = np.asarray(idx[:b])
+                                     interpret=self.interpret),
+                self._tracker, "sim_top1")
+        vals = np.asarray(ops.to_host(vals)[:b], dtype=np.float64)
+        idx = ops.to_host(idx)[:b]
         cids = store.cid[idx].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
         sims = np.where(cids >= 0, vals, -np.inf)
@@ -682,18 +701,22 @@ class KernelBackend:
         qm = self._qhost.sync(store.version, store.dirty_since, store.emb)
         dev = self._q8_mirror.sync(
             store.version, store.dirty_since,
-            lambda: {"q8": qm.q8, "scale": qm.scale})
+            lambda: {"q8": qm.q8, "scale": qm.scale, "l1": qm.l1})
+        if self.quantized.fused and b <= self.quantized.fused_max_batch:
+            return self._top1_batch_quantized_fused(store, queries, dev)
         pad = (-b) % self.q_pad
         qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
         q8, qs, ql1 = quantize_rows_int8(qp)
         k = self.quantized.k
         with annotate("rac/sim_topk_q8"):
-            vals, idx = ops.sim_topk_q8(q8, qs, dev["q8"], dev["scale"], k,
+            vals, idx = ops.run_timed(
+                lambda: ops.sim_topk_q8(q8, qs, dev["q8"], dev["scale"], k,
                                         n_valid=store.hwm,
                                         use_pallas=self.use_pallas,
-                                        interpret=self.interpret)
-        vals = np.asarray(vals[:b], dtype=np.float64)
-        rows = np.asarray(idx[:b])
+                                        interpret=self.interpret),
+                self._tracker, "sim_topk_q8")
+        vals = np.asarray(ops.to_host(vals)[:b], dtype=np.float64)
+        rows = ops.to_host(idx)[:b]
         eps = scan_margin(qs[:b], ql1[:b], qm.scale, qm.l1, dim)
         cids, sims, n_fb, n_union = resolve_topk(
             vals, rows, eps, k >= store.hwm, self.quantized.tau_hit,
@@ -723,6 +746,18 @@ class KernelBackend:
         idx = self._pidx
         dim = store.emb.shape[1]
 
+        if cfg.fused and queries.shape[0] <= cfg.fused_max_batch \
+                and cfg.probes >= 1 and table.rep.shape[0] >= 1 \
+                and store.hwm > 0:
+            idx.sync(store, table)
+            # unbound on purpose: the sharded backend delegates its whole
+            # pruned pass here and carries the same mirror attributes but
+            # not these helpers
+            out = KernelBackend._fused_pruned_batch(self, store, table,
+                                                    queries, cfg, idx)
+            self._flush_sync()
+            return out
+
         def route(qs, aug, n_top):
             # the driver synced ``idx`` already; freshen the device copy
             # of the aug matrix against the index's own journal
@@ -732,10 +767,13 @@ class KernelBackend:
             pad = (-b) % self.q_pad
             qp = np.pad(qs, ((0, pad), (0, 0))) if pad else qs
             with annotate("rac/route_topics"):
-                vals, tids = ops.route_topics(
-                    qp, dev["aug"], cfg.probes, n_valid=n_top,
-                    use_pallas=self.use_pallas, interpret=self.interpret)
-            return np.asarray(vals[:b]), np.asarray(tids[:b])
+                vals, tids = ops.run_timed(
+                    lambda: ops.route_topics(
+                        qp, dev["aug"], cfg.probes, n_valid=n_top,
+                        use_pallas=self.use_pallas,
+                        interpret=self.interpret),
+                    self._tracker, "route_topics")
+            return ops.to_host(vals)[:b], ops.to_host(tids)[:b]
 
         if self.quantized is not None:
             # unbound on purpose: the sharded backend delegates its whole
@@ -753,6 +791,145 @@ class KernelBackend:
             exact_fn=lambda sel: self._top1_batch_exact(store, queries[sel]))
         self._flush_sync()
         return out
+
+    def _top1_batch_quantized_fused(self, store: ResidentStore,
+                                    queries: np.ndarray, dev
+                                    ) -> tuple[np.ndarray, np.ndarray]:
+        """One-launch quantized lookup (``kernels/fused.py``): the int8
+        Top-K, the fp32 union rescore, and the ``resolve_topk`` safety
+        arms run inside one jitted program; the host maps winner slots to
+        cids and exact-rescans only the uncertified rows.  The fp32 slab
+        stays mirrored on device for the union gather — a capacity (not
+        bandwidth) cost relative to the staged path: the scan itself still
+        streams only int8 bytes."""
+        from repro.kernels import fused, ops
+        b, dim = queries.shape
+        cfg = self.quantized
+        slab = self._store_mirror.sync(
+            store.version, store.dirty_since,
+            lambda: {"emb": store.emb, "occ": store.occ})
+        bq = fused.pad_pow2(b, 1)       # pow2 bucket, floor 1 (serving b=1)
+        qp, q8q, qsc, ql1 = fused.prep_queries(queries, bq)
+        n_slots = store.emb.shape[0]
+        with annotate("rac/fused_quant"):
+            out = ops.run_timed(
+                lambda: fused.fused_quant_lookup(
+                    qp, q8q, qsc, ql1, slab["emb"], dev["q8"],
+                    dev["scale"], dev["l1"], store.hwm, b, cfg.tau_hit,
+                    k=min(int(cfg.k), n_slots), use_pallas=self.use_pallas,
+                    interpret=self.interpret),
+                self._tracker, "fused_quant")
+        win, rmax, cert, n_u = ops.to_host_tuple(out)
+        win = win[:b].astype(np.int64)
+        rmax = np.asarray(rmax[:b], dtype=np.float64)
+        certm = cert[:b].astype(bool)
+        ok = win < n_slots                       # sentinel = no finite score
+        cids = np.where(ok, store.cid[np.minimum(win, n_slots - 1)], -1)
+        sims = np.where(cids >= 0, rmax, -np.inf)
+        n_fb = int(b - np.count_nonzero(certm))
+        if n_fb:
+            sel = np.flatnonzero(~certm)
+            f_c, f_s = self._top1_batch_exact(store, queries[sel])
+            cids[sel] = np.asarray(f_c, dtype=np.int64)
+            sims[sel] = np.asarray(f_s, dtype=np.float64)
+        account_scan(self.quant_stats, n_valid=store.hwm, dim=dim, batch=b,
+                     n_union=int(n_u), n_fallback=n_fb)
+        fused.fused_stats["fallback_rows"] += n_fb
+        self._flush_sync()
+        return cids, sims
+
+    def _fused_pruned_batch(self, store: ResidentStore, table: PolicyTable,
+                            queries: np.ndarray, cfg, idx):
+        """Mirror-freshening wrapper of :meth:`_fused_pruned_call` for a
+        single journaled store (``idx`` must already be synced).  The int8
+        mirror is maintained even without a composed quantized config —
+        the fused candidate scan is always int8 (see docs)."""
+        qm = self._qhost.sync(store.version, store.dirty_since, store.emb)
+        slab = self._store_mirror.sync(
+            store.version, store.dirty_since,
+            lambda: {"emb": store.emb, "occ": store.occ})
+        q8d = self._q8_mirror.sync(
+            store.version, store.dirty_since,
+            lambda: {"q8": qm.q8, "scale": qm.scale, "l1": qm.l1})
+        augd = self._route_mirror.sync(idx.version, idx.dirty_since,
+                                       lambda: {"aug": idx.aug})
+        return KernelBackend._fused_pruned_call(
+            self, store, table, queries, cfg, idx, emb_dev=slab["emb"],
+            q8_dev=q8d, aug_dev=augd["aug"], csr_mirror=self._csr_mirror,
+            slot_off=0, n_slots=store.emb.shape[0], cid_arr=store.cid,
+            exact_fn=lambda sel: self._top1_batch_exact(store, queries[sel]),
+            stats=self.prune_stats)
+
+    def _fused_pruned_call(self, store, table, queries: np.ndarray, cfg,
+                           idx, *, emb_dev, q8_dev, aug_dev, csr_mirror,
+                           slot_off: int, n_slots: int, cid_arr,
+                           exact_fn, stats: dict):
+        """Shared fused-pruned driver (single stores and arena views):
+        prep the static shape buckets, make ONE jitted launch covering
+        routing → probe cap → CSR gather → int8 scan → fp32 union rescore
+        → safety predicates, then map winners/fallbacks and ledger on the
+        host.  ``slot_off`` shifts CSR slot ids into the flat (P·S) arena
+        slab; ``n_slots`` is the per-view slot count winners map back
+        into (the sentinel row lands outside it)."""
+        from repro.kernels import fused, ops
+        b, dim = queries.shape
+        probes = int(cfg.probes)
+        indptr_h, slot_ids, unassigned = idx.csr()
+        t_rows = idx.aug.shape[0]
+        budget = 1 << 30
+        if cfg.max_scan_frac is not None:
+            budget = max(int(cfg.min_scan_rows),
+                         int(cfg.max_scan_frac * store.hwm))
+        cap_c = fused.candidate_cap(np.diff(indptr_h), unassigned.size,
+                                    probes, budget)
+        csr = csr_mirror.sync(
+            (idx.key, t_rows, slot_off), lambda v: None,
+            lambda: dict(zip(
+                ("indptr", "slots"),
+                fused.csr_device_arrays(indptr_h, slot_ids + slot_off,
+                                        unassigned + slot_off, t_rows))))
+        # pow2 bucket, floor 1: every padded row pays a full cap_c-row
+        # gather, and the serving path is b=1
+        bq = fused.pad_pow2(b, 1)
+        qp, q8q, qsc, ql1 = fused.prep_queries(queries, bq)
+        k = (int(self.quantized.k) if self.quantized is not None
+             else fused.DEFAULT_K)
+        with annotate("rac/fused_pruned"):
+            out = ops.run_timed(
+                lambda: fused.fused_pruned_lookup(
+                    qp, q8q, qsc, ql1, emb_dev, q8_dev["q8"],
+                    q8_dev["scale"], q8_dev["l1"], aug_dev, csr["indptr"],
+                    csr["slots"], int(table.topic_hwm), budget, b,
+                    cfg.tau_hit, probes=probes, cap_c=cap_c, k=k,
+                    use_pallas=self.use_pallas, interpret=self.interpret),
+                self._tracker, "fused_pruned")
+        win, rmax, ub, cert, total, probed, capped, n_u = \
+            ops.to_host_tuple(out)
+        local = win[:b].astype(np.int64) - slot_off
+        rmax = np.asarray(rmax[:b], dtype=np.float64)
+        certm = cert[:b].astype(bool)
+        ok = (local >= 0) & (local < n_slots)
+        cids = np.where(ok, cid_arr[np.clip(local, 0, n_slots - 1)], -1)
+        sims = np.where(cids >= 0, rmax, -np.inf)
+        n_fb = int(b - np.count_nonzero(certm))
+        if n_fb:
+            sel = np.flatnonzero(~certm)
+            f_c, f_s = exact_fn(sel)
+            cids[sel] = np.asarray(f_c, dtype=np.int64)
+            sims[sel] = np.asarray(f_s, dtype=np.float64)
+        tot = int(total[:b].sum())
+        ncap = int(capped[:b].sum())
+        # gathered int8 candidate bytes (codes + scale + l1) + the fp32
+        # union-rescore gather
+        slab_bytes = tot * (dim + 8) + int(n_u) * dim * 4
+        account_prune(stats, n_valid=int(store.hwm), dim=dim,
+                      n_topics=int(table.topic_hwm), batch=b,
+                      probes=int(probed[:b].sum()), scanned_rows=tot,
+                      slab_bytes=slab_bytes, n_fallback=n_fb,
+                      n_capped=ncap)
+        fused.fused_stats["fallback_rows"] += n_fb
+        fused.fused_stats["capped_rows"] += ncap
+        return cids, sims
 
     def _make_pruned_q8_scan(self, store: ResidentStore,
                              queries: np.ndarray):
@@ -786,11 +963,13 @@ class KernelBackend:
             csc[:n] = qm.scale[rows]
             k = min(k_cfg, n)
             with annotate("rac/sim_topk_q8_pruned"):
-                vals, idx = ops.sim_topk_q8(q8, qsc, c8, csc, k, n_valid=n,
+                vals, idx = ops.run_timed(
+                    lambda: ops.sim_topk_q8(q8, qsc, c8, csc, k, n_valid=n,
                                             use_pallas=self.use_pallas,
-                                            interpret=self.interpret)
-            vals = np.asarray(vals[:b], dtype=np.float64)
-            lrows = np.asarray(idx[:b])
+                                            interpret=self.interpret),
+                    self._tracker, "sim_topk_q8")
+            vals = np.asarray(ops.to_host(vals)[:b], dtype=np.float64)
+            lrows = ops.to_host(idx)[:b]
             eps = scan_margin(qsc[:b], ql1[:b], qm.scale[rows],
                               qm.l1[rows], dim)
             # local shortlist indices are ascending positions into the
@@ -827,18 +1006,36 @@ class KernelBackend:
                              "built with track_rows=True")
         b = queries.shape[0]
         n_pol = arena.occ.shape[0]
+        n_slots = arena.occ.shape[1]
         dim = arena.emb.shape[-1]
         cfg = self.pruned
+        fused_on = cfg.fused and cfg.probes >= 1
+        if fused_on:
+            # one flat (P·S, D) fp32 + int8 mirror pair serves every
+            # policy's fused launch; per-policy CSR slot ids are shifted
+            # by p·S into the flat slab
+            flat_dev = self._arena_mirror.sync(
+                arena.version, arena.dirty_since,
+                lambda: {"emb": arena.emb.reshape(n_pol * n_slots, dim)})
+            qm = self._qhost_arena.sync(
+                arena.version, arena.dirty_since,
+                arena.emb.reshape(n_pol * n_slots, dim))
+            q8d = self._q8_arena_mirror.sync(
+                arena.version, arena.dirty_since,
+                lambda: {"q8": qm.q8, "scale": qm.scale, "l1": qm.l1})
 
         def route(qs, aug, n_top):
             bq = qs.shape[0]
             pad = (-bq) % self.q_pad
             qp = np.pad(qs, ((0, pad), (0, 0))) if pad else qs
             with annotate("rac/route_topics"):
-                vals, tids = ops.route_topics(
-                    qp, aug, cfg.probes, n_valid=n_top,
-                    use_pallas=self.use_pallas, interpret=self.interpret)
-            return np.asarray(vals[:bq]), np.asarray(tids[:bq])
+                vals, tids = ops.run_timed(
+                    lambda: ops.route_topics(
+                        qp, aug, cfg.probes, n_valid=n_top,
+                        use_pallas=self.use_pallas,
+                        interpret=self.interpret),
+                    self._tracker, "route_topics")
+            return ops.to_host(vals)[:bq], ops.to_host(tids)[:bq]
 
         out_c = np.full((n_pol, b), -1, dtype=np.int64)
         out_s = np.full((n_pol, b), -np.inf)
@@ -850,6 +1047,25 @@ class KernelBackend:
             if table is None:
                 cids, sims = KernelBackend._top1_batch_exact(self, view,
                                                              queries)
+            elif fused_on and table.rep.shape[0] >= 1 and view.hwm > 0:
+                idx = self._pidx_arena.setdefault(p, TopicBucketIndex())
+                idx.sync(view, table)
+                csr_m = self._csr_arena.setdefault(
+                    p, _DeviceMirror({"indptr": np.int32,
+                                      "slots": np.int32}))
+                # the aug matrix rides the launch as a host array (the
+                # staged arena route does the same) — per-policy device
+                # mirrors aren't worth their bookkeeping at arena sizes
+                cids, sims = KernelBackend._fused_pruned_call(
+                    self, view, table, queries, cfg, idx,
+                    emb_dev=flat_dev["emb"], q8_dev=q8d,
+                    aug_dev=np.asarray(idx.aug, dtype=np.float32),
+                    csr_mirror=csr_m, slot_off=p * n_slots,
+                    n_slots=n_slots, cid_arr=view.cid,
+                    exact_fn=lambda sel, v=view:
+                        KernelBackend._top1_batch_exact(self, v,
+                                                        queries[sel]),
+                    stats=self.prune_stats)
             else:
                 idx = self._pidx_arena.setdefault(p, TopicBucketIndex())
                 cids, sims = pruned_top1_batch(
@@ -882,8 +1098,8 @@ class KernelBackend:
         vals, idx = ops.sim_top1(qp, cand, n_valid=k,
                                  use_pallas=self.use_pallas,
                                  interpret=self.interpret)
-        vals = np.asarray(vals[:b], dtype=np.float64)
-        idx = np.asarray(idx[:b])
+        vals = np.asarray(ops.to_host(vals)[:b], dtype=np.float64)
+        idx = ops.to_host(idx)[:b]
         return store.cid[rows[idx]].copy(), vals
 
     def topk_rows(self, store: ResidentStore, queries: np.ndarray,
@@ -909,8 +1125,8 @@ class KernelBackend:
         vals, idx = ops.sim_topk(qp, cand, kk, n_valid=n,
                                  use_pallas=self.use_pallas,
                                  interpret=self.interpret)
-        vals = np.asarray(vals[:b], dtype=np.float64)      # (B, kk)
-        idx = np.asarray(idx[:b])
+        vals = np.asarray(ops.to_host(vals)[:b], dtype=np.float64)  # (B, kk)
+        idx = ops.to_host(idx)[:b]
         finite = np.isfinite(vals)
         out_c[:, :kk] = np.where(
             finite, store.cid[rows[np.minimum(idx, n - 1)]], -1)
@@ -949,12 +1165,14 @@ class KernelBackend:
             arena.version, arena.dirty_since,
             lambda: {"emb": arena.emb.reshape(n_pol * n_slots, dim)})
         with annotate("rac/sim_top1_multi"):
-            vals, idx = ops.sim_top1_multi(
-                qp, dev["emb"].reshape(n_pol, n_slots, dim),
-                n_valid=arena.hwms(), use_pallas=self.use_pallas,
-                interpret=self.interpret)
-        vals = np.asarray(vals[:, :b], dtype=np.float64)
-        idx = np.asarray(idx[:, :b])
+            vals, idx = ops.run_timed(
+                lambda: ops.sim_top1_multi(
+                    qp, dev["emb"].reshape(n_pol, n_slots, dim),
+                    n_valid=arena.hwms(), use_pallas=self.use_pallas,
+                    interpret=self.interpret),
+                self._tracker, "sim_top1_multi")
+        vals = np.asarray(ops.to_host(vals)[:, :b], dtype=np.float64)
+        idx = ops.to_host(idx)[:, :b]
         cids = arena.cid[np.arange(n_pol)[:, None], idx].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
         sims = np.where(cids >= 0, vals, -np.inf)
@@ -979,19 +1197,21 @@ class KernelBackend:
             arena.emb.reshape(n_pol * n_slots, dim))
         dev = self._q8_arena_mirror.sync(
             arena.version, arena.dirty_since,
-            lambda: {"q8": qm.q8, "scale": qm.scale})
+            lambda: {"q8": qm.q8, "scale": qm.scale, "l1": qm.l1})
         pad = (-b) % self.q_pad
         qp = np.pad(queries, ((0, pad), (0, 0))) if pad else queries
         q8, qs, ql1 = quantize_rows_int8(qp)
         k = self.quantized.k
         hwms = arena.hwms()
         with annotate("rac/sim_topk_q8_multi"):
-            vals, idx = ops.sim_topk_q8_multi(
-                q8, qs, dev["q8"].reshape(n_pol, n_slots, dim),
-                dev["scale"].reshape(n_pol, n_slots), k, n_valid=hwms,
-                use_pallas=self.use_pallas, interpret=self.interpret)
-        vals = np.asarray(vals[:, :b], dtype=np.float64)
-        rows = np.asarray(idx[:, :b])
+            vals, idx = ops.run_timed(
+                lambda: ops.sim_topk_q8_multi(
+                    q8, qs, dev["q8"].reshape(n_pol, n_slots, dim),
+                    dev["scale"].reshape(n_pol, n_slots), k, n_valid=hwms,
+                    use_pallas=self.use_pallas, interpret=self.interpret),
+                self._tracker, "sim_topk_q8_multi")
+        vals = np.asarray(ops.to_host(vals)[:, :b], dtype=np.float64)
+        rows = ops.to_host(idx)[:, :b]
         scale2 = qm.scale.reshape(n_pol, n_slots)
         l12 = qm.l1.reshape(n_pol, n_slots)
         out_c = np.full((n_pol, b), -1, dtype=np.int64)
@@ -1026,7 +1246,7 @@ class KernelBackend:
             np.asarray(t_last - t_now, dtype=np.int32),
             np.asarray(valid, dtype=bool), float(alpha), 0,
             use_pallas=self.use_pallas, interpret=self.interpret)
-        return np.asarray(out, dtype=np.float64)
+        return np.asarray(ops.to_host(out), dtype=np.float64)
 
     def rac_value(self, tsi, tids, tp_last, t_last, alpha, t_now):
         from repro.kernels import ops
@@ -1039,7 +1259,7 @@ class KernelBackend:
                             np.asarray(t_last - t_now, dtype=np.int32),
                             float(alpha), 0, use_pallas=self.use_pallas,
                             interpret=self.interpret)
-        return np.asarray(out, dtype=np.float64)
+        return np.asarray(ops.to_host(out), dtype=np.float64)
 
     def _device_state(self, store: ResidentStore, table: PolicyTable) -> dict:
         """The mirrored decision state, freshened by dirty-row scatter."""
@@ -1075,11 +1295,14 @@ class KernelBackend:
         # values with a runtime t_now — nothing recompiles as fill level,
         # topic count, or simulation time advance
         with annotate("rac/fused_decide"):
-            hv, hi, rv, ri, vv = ops.fused_decide(
-                qp, dev["emb"], store.hwm, dev["rep"], table.topic_hwm,
-                dev["tsi"], dev["tid"], dev["occ"], dev["tp"], dev["tl"],
-                t_now, alpha=float(alpha), use_pallas=self.use_pallas,
-                interpret=self.interpret)
+            out = ops.run_timed(
+                lambda: ops.fused_decide(
+                    qp, dev["emb"], store.hwm, dev["rep"], table.topic_hwm,
+                    dev["tsi"], dev["tid"], dev["occ"], dev["tp"],
+                    dev["tl"], t_now, alpha=float(alpha),
+                    use_pallas=self.use_pallas, interpret=self.interpret),
+                self._tracker, "fused_decide")
+        hv, hi, rv, ri, vv = ops.to_host_tuple(out)
         hv = np.asarray(hv[:b], dtype=np.float64)
         cids = store.cid[np.asarray(hi[:b])].copy()
         # a free (zeroed) slot can only win when all real sims < 0 → miss
@@ -1112,17 +1335,17 @@ class KernelBackend:
             table.topic_version, table.dirty_topics_since,
             lambda: {"rep": table.rep, "tp": table.tp_last,
                      "tl": table.t_last})
-        with annotate("rac/decide_q8"):
-            rv, ri = ops.sim_top1(qp, topic["rep"],
-                                  n_valid=table.topic_hwm,
-                                  use_pallas=self.use_pallas,
-                                  interpret=self.interpret)
-            vv = ops.victim_value(slot["tsi"], slot["tid"],
-                                  np.asarray(store.occ, dtype=np.int32),
-                                  topic["tp"], topic["tl"], t_now,
-                                  alpha=float(alpha),
-                                  use_pallas=self.use_pallas,
-                                  interpret=self.interpret)
+        # ONE auxiliary launch (routing Top-1 + victim values together)
+        # instead of the former sim_top1 + victim_value pair
+        with annotate("rac/decide_aux"):
+            out = ops.run_timed(
+                lambda: ops.decide_aux(
+                    qp, topic["rep"], table.topic_hwm, slot["tsi"],
+                    slot["tid"], np.asarray(store.occ, dtype=np.int32),
+                    topic["tp"], topic["tl"], t_now, alpha=float(alpha),
+                    use_pallas=self.use_pallas, interpret=self.interpret),
+                self._tracker, "decide_aux")
+        rv, ri, vv = ops.to_host_tuple(out)
         rv = np.asarray(rv[:b], dtype=np.float64)
         ri = np.where(np.isfinite(rv),
                       np.asarray(ri[:b], dtype=np.int64), -1)

@@ -244,8 +244,10 @@ class SemanticCache:
         (``sync``, when the backend keeps device mirrors), and the
         admission-queue state (``pending_admits`` + the producer-visible
         ``admit_stall_s``, split into ``enqueue_s``/``flush_s`` under
-        async admission).  Consumers (the serving engine's ``stats``,
-        benchmarks, reports) read this instead of hand-merging the four
+        async admission), plus the always-present reduced-traffic scan
+        ledgers (``quant``/``prune``) and the launch/transfer ledger
+        (``dispatch``).  Consumers (the serving engine's ``stats``,
+        benchmarks, reports) read this instead of hand-merging the
         historical surfaces."""
         with self._lock:
             snap = self.metrics.snapshot()
@@ -272,6 +274,13 @@ class SemanticCache:
                 from .pruned import new_prune_stats
                 prune = new_prune_stats()
             snap["prune"] = dict(prune)
+            # launch/transfer ledger: always present so dashboards can
+            # chart launches-per-chunk without guarding; host backends
+            # report zeros (they never dispatch)
+            dispatch = getattr(self.backend, "dispatch_stats", None)
+            if dispatch is None:
+                dispatch = {"launches": 0, "host_syncs": 0, "kernel_s": 0.0}
+            snap["dispatch"] = dict(dispatch)
             return snap
 
     def _flush_quant(self):

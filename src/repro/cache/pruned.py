@@ -63,9 +63,31 @@ class PrunedLookupConfig:
     (every topic bound and every scanned candidate below tau ⇒ certain
     miss); the facade copies its own ``tau_hit`` in for semantic-mode
     stores when left ``None``.
+
+    ``max_scan_frac`` caps each query's gathered candidate rows at that
+    fraction of the resident count (floored at ``min_scan_rows`` so
+    small stores stay uncapped): probes are kept greedily in
+    descending-bound order while the cumulative bucket rows fit the
+    budget, and the first dropped probe's bound becomes the query's
+    certification bound — wide-P queries landing in fat buckets degrade
+    to fewer probes (at worst the tau short-circuit) instead of
+    gathering more bytes than the exact scan would stream.  Capped
+    queries are counted in ``prune_stats["capped"]``.  ``None`` disables
+    the cap.  ``fused`` routes kernel backends through the
+    device-resident fused pipeline (one launch from routing to certified
+    decision; see ``docs/fused_pipeline.md``) — the staged multi-launch
+    driver remains available with ``fused=False``.  ``fused_max_batch``
+    is the chunk-size dispatch policy: the fused program gathers a full
+    ``cap_c``-row candidate block per query, so past this batch width
+    the staged driver's signature-grouped shared gathers win and wide
+    chunks fall through to it.
     """
     probes: int = 2
     tau_hit: Optional[float] = None
+    max_scan_frac: Optional[float] = 0.02
+    min_scan_rows: int = 256
+    fused: bool = True
+    fused_max_batch: int = 16
 
 
 def as_pruned_config(spec) -> Optional[PrunedLookupConfig]:
@@ -87,12 +109,13 @@ def new_prune_stats() -> dict:
     ``metrics_snapshot()["prune"]``, even with the path off)."""
     return {"scans": 0, "queries": 0, "fallbacks": 0, "probed_topics": 0,
             "scanned_rows": 0, "rows_exact": 0,
-            "bytes_scanned": 0, "bytes_exact": 0}
+            "bytes_scanned": 0, "bytes_exact": 0, "capped": 0}
 
 
 def account_prune(stats: dict, *, n_valid: int, dim: int, n_topics: int,
                   batch: int, probes: int, scanned_rows: int,
-                  slab_bytes: int, n_fallback: int) -> None:
+                  slab_bytes: int, n_fallback: int,
+                  n_capped: int = 0) -> None:
     """Ledger one pruned batch scan.
 
     ``bytes_exact`` is what the exact path would have streamed (the fp32
@@ -106,6 +129,7 @@ def account_prune(stats: dict, *, n_valid: int, dim: int, n_topics: int,
     stats["scans"] += 1
     stats["queries"] += batch
     stats["fallbacks"] += n_fallback
+    stats["capped"] += n_capped
     stats["probed_topics"] += probes
     stats["scanned_rows"] += scanned_rows
     stats["rows_exact"] += n_valid * batch
@@ -155,6 +179,16 @@ class TopicBucketIndex:
     @property
     def version(self) -> int:
         return self.log.version
+
+    @property
+    def key(self):
+        """Identity of the last-synced (store, table) journal state.
+
+        Device CSR mirrors must key on this triple, **not** on
+        ``version``: membership churn confined to the unassigned bucket
+        (e.g. evicting a topicless row) touches no aug row, so the aug
+        journal doesn't move even though the CSR arrays changed."""
+        return self._key
 
     def dirty_since(self, version: int):
         return self.log.dirty_since(version)
@@ -286,6 +320,13 @@ class TopicBucketIndex:
         self._csr_fresh = True
         self._cand_cache = {}
 
+    def csr(self) -> tuple:
+        """Fresh packed CSR view: ``(indptr, slot_ids, unassigned)``.
+        Packs lazily if membership churned since the last pack."""
+        if not self._csr_fresh:
+            self._pack_csr()
+        return self.indptr, self.slot_ids, self.unassigned
+
     def group_key(self, tids) -> tuple:
         """Canonical probe signature: sorted topic ids with non-empty
         buckets (empty buckets contribute no candidates and are dropped
@@ -403,14 +444,32 @@ def pruned_top1_batch(store, table, queries: np.ndarray,
     if cfg.tau_hit is not None and probe_vals.shape[1] > 0:
         skip = probe_vals[:, 0] < cfg.tau_hit
         ub[skip] = probe_vals[skip, 0]
+    budget = None
+    if cfg.max_scan_frac is not None:
+        budget = max(int(cfg.min_scan_rows),
+                     int(cfg.max_scan_frac * store.hwm))
     groups: dict[tuple, list[int]] = {}
     n_probed = 0
+    n_capped = 0
     empty_sig = ()
     for i in range(b):
         if skip[i]:
             sig = empty_sig
         else:
             live = probe_tids[i][np.isfinite(probe_vals[i])]
+            if budget is not None and live.size:
+                # adaptive probe cap: keep the longest descending-bound
+                # prefix whose cumulative bucket rows fit the budget; the
+                # first dropped probe's bound (≥ every later bound and ≥
+                # the unprobed bound) becomes the certification bound
+                indptr, _, _ = idx.csr()
+                cnts = indptr[live + 1] - indptr[live]
+                keep = int(np.searchsorted(np.cumsum(cnts), budget,
+                                           side="right"))
+                if keep < live.size:
+                    n_capped += 1
+                    ub[i] = probe_vals[i, keep]
+                    live = live[:keep]
             sig = idx.group_key(live)
             n_probed += len(sig)
         groups.setdefault(sig, []).append(i)
@@ -432,5 +491,6 @@ def pruned_top1_batch(store, table, queries: np.ndarray,
                                               exact_fn)
     account_prune(stats, n_valid=store.hwm, dim=dim, n_topics=n_top,
                   batch=b, probes=n_probed, scanned_rows=scanned,
-                  slab_bytes=slab_bytes, n_fallback=n_fb)
+                  slab_bytes=slab_bytes, n_fallback=n_fb,
+                  n_capped=n_capped)
     return out_cids, out_sims

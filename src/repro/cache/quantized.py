@@ -50,9 +50,17 @@ class QuantizedLookupConfig:
     threshold, used by the certain-miss arm of the safety predicate; when
     ``None`` (content-mode stores, arenas without a tau band) only the
     top-1-margin arm certifies and everything else falls back.
+    ``fused`` routes kernel backends through the device-resident fused
+    pipeline (int8 scan + fp32 rescore + safety predicate in one jitted
+    launch; see ``docs/fused_pipeline.md``); ``fused=False`` keeps the
+    staged multi-launch driver.  ``fused_max_batch`` bounds the chunk
+    width the fused program serves — wider chunks fall through to the
+    staged driver, whose per-stage launches amortize better there.
     """
     k: int = 8
     tau_hit: Optional[float] = None
+    fused: bool = True
+    fused_max_batch: int = 16
 
 
 def as_quantized_config(spec) -> Optional[QuantizedLookupConfig]:

@@ -146,7 +146,22 @@ class ShardedKernelBackend:
         self._qhost = QuantizedSlabMirror()
         self._qhost_arena = QuantizedSlabMirror()
         self._q8_arena_mirror = _DeviceMirror({"q8": np.int8,
-                                               "scale": np.float32})
+                                               "scale": np.float32,
+                                               "l1": np.float32})
+        # fused-pipeline delegation mirrors: the pruned pass hands the
+        # whole batch to KernelBackend._fused_pruned_batch (unbound), which
+        # expects the dense backend's mirror attributes on ``self`` — the
+        # fp32/int8 single-device copies it launches against, the arena's
+        # flat stacked slab, and the device CSR form of each bucket index
+        self._store_mirror = _DeviceMirror({"emb": np.float32,
+                                            "occ": np.int32})
+        self._q8_mirror = _DeviceMirror({"q8": np.int8,
+                                         "scale": np.float32,
+                                         "l1": np.float32})
+        self._arena_mirror = _DeviceMirror({"emb": np.float32})
+        self._csr_mirror = _DeviceMirror({"indptr": np.int32,
+                                          "slots": np.int32})
+        self._csr_arena: dict[int, _DeviceMirror] = {}
         self._q8_slab_cache: dict[int, tuple] = {}
         self._q8_scatter_fn = None
         self._qlookup_fns: dict[int, object] = {}   # k -> shard_map lookup
@@ -160,12 +175,23 @@ class ShardedKernelBackend:
     @property
     def sync_stats(self) -> dict:
         """Aggregate sync observability: the sharded slab caches' own
-        ledger plus the dense-delegation device mirrors (the arena int8
-        mirror and the pruned path's routing matrix) — their uploads land
-        here alongside the fp32 slab traffic."""
-        return {k: (self._sync[k] + self._q8_arena_mirror.stats[k]
-                    + self._route_mirror.stats[k])
+        ledger plus every dense-delegation device mirror (the arena int8
+        mirror, the routing matrix, and the fused pipeline's fp32/int8/CSR
+        copies) — their uploads land here alongside the fp32 slab
+        traffic."""
+        mirrors = (self._q8_arena_mirror, self._route_mirror,
+                   self._store_mirror, self._q8_mirror, self._arena_mirror,
+                   self._csr_mirror, *self._csr_arena.values())
+        return {k: self._sync[k] + sum(m.stats[k] for m in mirrors)
                 for k in ("full", "incremental", "rows", "bytes")}
+
+    @property
+    def dispatch_stats(self) -> dict:
+        """Launch/transfer observability: jitted dispatches issued, blocking
+        device→host syncs, and seconds spent inside timed kernel intervals.
+        Process-global (the jit caches are too) — consumers read deltas."""
+        from repro.kernels import ops
+        return dict(ops.dispatch_stats)
 
     def set_tracker(self, tracker) -> None:
         """Attach a :class:`repro.telemetry.Tracker` child; the backend

@@ -85,12 +85,14 @@ class _ArenaView(ResidentStore):
     def _stamp(self, slot: int):
         # journaling exists for device mirrors only: host-only arenas
         # (track_rows=False) skip it entirely — nothing keys on these
-        # versions — while device arenas stamp the flat journal and bump
-        # the view version (flagged-fallback mirrors key on it; a bump
-        # forces their conservative full re-upload)
+        # versions — while device arenas stamp the flat journal AND the
+        # view's own row journal: the per-view consumers (quantized host
+        # mirrors, the fused pipeline's topic-bucket indices) key on the
+        # view version and use dirty_since for incremental refresh, so a
+        # bare bump would force a full rebuild per mutation
         arena = self._arena
         if arena.track_rows:
-            self._log.bump()
+            self._log.stamp(slot)
             arena._log.stamp(self._p * arena.n_slots + slot)
 
     # lean clones of ResidentStore.insert/remove: identical state changes,

@@ -9,6 +9,7 @@ isn't worth it).
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,61 @@ from .similarity_topk import (BC as _ST_BC, BQ as _ST_BQ, sim_top1_pallas,
 
 def _is_cpu() -> bool:
     return jax.devices()[0].platform == "cpu"
+
+
+#: Process-global dispatch ledger.  ``launches`` counts kernel dispatches
+#: (one per public wrapper call — each is one jitted program), ``host_syncs``
+#: counts device→host materializations (every ``to_host``), and ``kernel_s``
+#: accumulates blocked-on-device wall time from ``run_timed`` so benches can
+#: separate scan time from host-driver overhead.
+dispatch_stats = {"launches": 0, "host_syncs": 0, "kernel_s": 0.0}
+
+
+def count_launch(n: int = 1) -> None:
+    """Tick the kernel-dispatch counter (one jitted program launched)."""
+    dispatch_stats["launches"] += n
+
+
+def to_host(x):
+    """Materialize ``x`` on the host, counting the sync when it actually
+    crosses the device boundary (numpy inputs pass through uncounted)."""
+    if isinstance(x, jax.Array):
+        dispatch_stats["host_syncs"] += 1
+    return np.asarray(x)
+
+
+def to_host_tuple(xs):
+    """Materialize a tuple of device arrays as ONE counted sync — the
+    fused pipeline's single device→host transfer per chunk."""
+    dispatch_stats["host_syncs"] += 1
+    return jax.device_get(xs)
+
+
+def run_timed(fn, tracker=None, name: str = "kernel"):
+    """Run ``fn`` (a zero-arg closure dispatching device work), block until
+    its outputs are ready, and charge the interval to
+    ``dispatch_stats["kernel_s"]`` — the kernel-time clock the roofline
+    table reads alongside wall-clock.  When a tracker is attached the
+    interval is also emitted as a trace span."""
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    t1 = time.perf_counter()
+    dispatch_stats["kernel_s"] += t1 - t0
+    if tracker is not None:
+        tracker.add_span(f"kernel/{name}", t0, t1)
+    return out
+
+
+def _counted(fn):
+    """Wrap a public dispatch wrapper so every call ticks ``launches``."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        count_launch()
+        return fn(*args, **kwargs)
+
+    return wrapper
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
@@ -61,6 +117,7 @@ def _sim_top1_jit(queries, candidates, n_valid, *, use_pallas, interpret):
                         interpret=interpret)
 
 
+@_counted
 def sim_top1(queries, candidates, n_valid=None, *, use_pallas: bool = True,
              interpret: bool | None = None):
     """Top-1 cosine retrieval: (Q,D)x(N,D) -> (vals (Q,), idx (Q,)).
@@ -96,6 +153,7 @@ def _sim_topk_jit(queries, candidates, n_valid, *, k, use_pallas, interpret):
                         use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 def sim_topk(queries, candidates, k: int, n_valid=None, *,
              use_pallas: bool = True, interpret: bool | None = None):
     """Top-K cosine retrieval: (Q,D)x(N,D) -> (vals (Q,K), idx (Q,K)),
@@ -131,6 +189,7 @@ def _route_topics_jit(queries, reps_aug, n_valid, *, k, use_pallas,
                             use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 def route_topics(queries, reps_aug, probes: int, n_valid=None, *,
                  use_pallas: bool = True, interpret: bool | None = None):
     """Stage-1 routing for the pruned lookup: (Q,D)x(T,D+1) ->
@@ -177,6 +236,7 @@ def _sim_topk_q8_jit(q8, qscale, c8, cscale, n_valid, *, k, use_pallas,
                            use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 def sim_topk_q8(q8, qscale, c8, cscale, k: int, n_valid=None, *,
                 use_pallas: bool = True, interpret: bool | None = None):
     """Quantized-slab Top-K candidate generation:
@@ -227,6 +287,7 @@ def _sim_topk_q8_multi_jit(q8, qscale, slabs8, cscales, n_valid, *, k,
                                  use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 def sim_topk_q8_multi(q8, qscale, slabs8, cscales, k: int, n_valid=None, *,
                       use_pallas: bool = True,
                       interpret: bool | None = None):
@@ -271,6 +332,7 @@ def _sim_top1_multi_jit(queries, slabs, n_valid, *, use_pallas, interpret):
                               use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 def sim_top1_multi(queries, slabs, n_valid=None, *, use_pallas: bool = True,
                    interpret: bool | None = None):
     """Policy-stacked Top-1 retrieval: (B,D)x(P,N,D) -> ((P,B), (P,B)).
@@ -287,6 +349,7 @@ def sim_top1_multi(queries, slabs, n_valid=None, *, use_pallas: bool = True,
                                use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def flash_attention(q, k, v, *, use_pallas: bool = True,
                     interpret: bool | None = None):
@@ -302,6 +365,7 @@ def flash_attention(q, k, v, *, use_pallas: bool = True,
     return out[:, :, :s]
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def decode_attention(q, k, v, pos, *, use_pallas: bool = True,
                      interpret: bool | None = None):
@@ -327,6 +391,7 @@ def rac_value_raw(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
     return out[:n]
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("alpha", "t_now", "use_pallas",
                                              "interpret"))
 def rac_value(tsi, tid, tp_last, t_last, alpha: float, t_now: int, *,
@@ -357,6 +422,7 @@ def victim_value_raw(tsi, tid, occ, tp_last, t_last, t_now, *, alpha: float,
     return out[:n]
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("alpha", "use_pallas",
                                              "interpret"))
 def victim_value(tsi, tid, occ, tp_last, t_last, t_now, *, alpha: float,
@@ -368,6 +434,7 @@ def victim_value(tsi, tid, occ, tp_last, t_last, t_now, *, alpha: float,
                             use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("alpha", "use_pallas",
                                              "interpret"))
 def victim_value_multi(tsi, tid, occ, tp_last, t_last, t_now, *,
@@ -416,6 +483,7 @@ def fused_decide_raw(queries, slab, n_valid, reps, n_topics, tsi, tid, occ,
     return hit_vals, hit_idx, route_vals, route_idx, victim
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("alpha", "use_pallas",
                                              "interpret"))
 def fused_decide(queries, slab, n_valid, reps, n_topics, tsi, tid, occ,
@@ -435,6 +503,7 @@ def fused_decide(queries, slab, n_valid, reps, n_topics, tsi, tid, occ,
                             use_pallas=use_pallas, interpret=interpret)
 
 
+@_counted
 @functools.partial(jax.jit, static_argnames=("alpha", "t_now", "use_pallas",
                                              "interpret"))
 def rac_value_masked(tsi, tid, tp_last, t_last, valid, alpha: float,
@@ -450,3 +519,27 @@ def rac_value_masked(tsi, tid, tp_last, t_last, valid, alpha: float,
     vals = rac_value_raw(tsi, tid, tp_last, t_last, alpha, t_now,
                          use_pallas=use_pallas, interpret=interpret)
     return jnp.where(valid, vals, jnp.inf)
+
+
+@_counted
+@functools.partial(jax.jit, static_argnames=("alpha", "use_pallas",
+                                             "interpret"))
+def decide_aux(queries, reps, n_topics, tsi, tid, occ, tp_last, t_last,
+               t_now, *, alpha: float, use_pallas: bool = True,
+               interpret: bool | None = None):
+    """Auxiliary decision legs in one dispatch: routing Top-1 over the
+    dense topic-representative table plus the occupancy-masked Eq.1 victim
+    values.
+
+    The approximate-lookup decide path can't use :func:`fused_decide` (its
+    hit leg comes from the quantized/pruned pipeline instead of a dense
+    ``sim_top1``), but its remaining legs — Alg. 4 routing and victim
+    scoring — still fuse, so a decide chunk costs the fused-lookup launch
+    plus exactly one aux launch instead of two separate dispatches."""
+    route_vals, route_idx = sim_top1_raw(queries, reps, jnp.int32(n_topics),
+                                         use_pallas=use_pallas,
+                                         interpret=interpret)
+    victim = victim_value_raw(tsi, tid, occ, tp_last, t_last,
+                              jnp.int32(t_now), alpha=alpha,
+                              use_pallas=use_pallas, interpret=interpret)
+    return route_vals, route_idx, victim

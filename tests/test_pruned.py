@@ -59,7 +59,7 @@ def test_pruned_config_normalization():
     assert set(new_prune_stats()) == {"scans", "queries", "fallbacks",
                                       "probed_topics", "scanned_rows",
                                       "rows_exact", "bytes_scanned",
-                                      "bytes_exact"}
+                                      "bytes_exact", "capped"}
 
 
 def test_prebuilt_backend_rejects_pruned_lookup():
